@@ -1,0 +1,85 @@
+"""Render the roofline tables (EXPERIMENTS.md §Roofline) from dry-run
+artifacts.  Baseline artifacts live in ``artifacts/dryrun_baseline`` (frozen
+before the §Perf iterations), the current code's numbers in
+``artifacts/dryrun``.
+
+    PYTHONPATH=src python -m benchmarks.roofline_report [--dir artifacts/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+ART = pathlib.Path(__file__).resolve().parent / "artifacts"
+
+
+def load(dirname: str):
+    recs = {}
+    for p in sorted((ART / dirname).glob("*.json")):
+        r = json.loads(p.read_text())
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def fmt_table(recs, mesh="16x16", baseline=None) -> str:
+    rows = []
+    header = (
+        "| arch | shape | dominant | compute s | memory s | collective s | "
+        "step LB s | useful | MFU bound |" + (" vs baseline |" if baseline else "")
+    )
+    sep = "|---" * (10 if baseline else 9) + "|"
+    rows.append(header)
+    rows.append(sep)
+    for (arch, shape, m), r in sorted(recs.items()):
+        if m != mesh or not r.get("ok"):
+            continue
+        t = r["roofline"]
+        row = (
+            f"| {arch} | {shape} | {t['dominant']} | {t['compute_s']:.2e} | "
+            f"{t['memory_s']:.2e} | {t['collective_s']:.2e} | "
+            f"{t['step_time_lb_s']:.2e} | {t['useful_ratio']:.2f} | {t['mfu_bound']:.3f} |"
+        )
+        if baseline:
+            b = baseline.get((arch, shape, m))
+            if b and b.get("ok"):
+                speed = b["roofline"]["step_time_lb_s"] / max(t["step_time_lb_s"], 1e-30)
+                row += f" {speed:,.1f}x |"
+            else:
+                row += " - |"
+        rows.append(row)
+    return "\n".join(rows)
+
+
+def memory_fit_table(recs, mesh="16x16") -> str:
+    rows = ["| arch | shape | args GB/dev | temp GB/dev | fits 16 GB |", "|---|---|---|---|---|"]
+    for (arch, shape, m), r in sorted(recs.items()):
+        if m != mesh or not r.get("ok"):
+            continue
+        mem = r["memory"]
+        args = (mem["argument_size_in_bytes"] + mem["output_size_in_bytes"]
+                - mem["alias_size_in_bytes"]) / 1e9
+        temp = mem["temp_size_in_bytes"] / 1e9
+        fits = "yes" if (mem["argument_size_in_bytes"] - mem["alias_size_in_bytes"]
+                         + mem["temp_size_in_bytes"]) / 1e9 < 16 else "NO"
+        rows.append(f"| {arch} | {shape} | {args:.2f} | {temp:.2f} | {fits} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="dryrun")
+    ap.add_argument("--baseline", default="dryrun_baseline")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    base = load(args.baseline) if (ART / args.baseline).exists() else None
+    n_ok = sum(1 for r in recs.values() if r.get("ok"))
+    print(f"## Roofline ({args.mesh}) — {n_ok}/{len(recs)} cells ok\n")
+    print(fmt_table(recs, args.mesh, base))
+    print("\n## Memory fit\n")
+    print(memory_fit_table(recs, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,300 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = the figure's headline
+quantity).  CPU-backend wall times are used for *relative* comparisons
+(float vs FlInt vs integer), mirroring the paper's relative-cycles axis;
+absolute TPU projections live in the roofline table (§Roofline).
+
+  Fig. 2  -> accuracy_identity        (pred identity + prob-delta magnitude)
+  Fig. 3  -> perf_float_flint_integer (3 impls x 2 datasets x n_trees)
+  IV-C    -> instruction_count_proxy  (HLO op counts per impl)
+  IV-E    -> memory_footprint         (artifact bytes, MCU-style)
+  IV-F    -> energy_model             (paper's E_saved formula)
+  kernels -> kernel_identity          (Pallas kernel == oracle, us/row)
+  §Roofline -> roofline_table         (from dry-run artifacts)
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+ART = pathlib.Path(__file__).resolve().parent / "artifacts"
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    row = f"{name},{us_per_call:.3f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def _time(fn, *args, reps=5, warmup=2):
+    for _ in range(warmup):
+        fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    if hasattr(out, "block_until_ready"):
+        out.block_until_ready()
+    elif isinstance(out, tuple) and hasattr(out[0], "block_until_ready"):
+        out[0].block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def _datasets():
+    from repro.data.tabular import make_esa_like, make_shuttle_like, train_test_split
+
+    shuttle = train_test_split(*make_shuttle_like(n=20000, seed=0), seed=0)
+    esa = train_test_split(*make_esa_like(n=20000, seed=0), seed=0)
+    return {"shuttle": shuttle, "esa": esa}
+
+
+def _forest(data, n_trees, depth=7, seed=0):
+    from repro.core.packing import pack_forest
+    from repro.trees.forest import RandomForestClassifier
+
+    Xtr, ytr, Xte, yte = data
+    rf = RandomForestClassifier(n_estimators=n_trees, max_depth=depth, seed=seed).fit(Xtr, ytr)
+    return rf, pack_forest(rf), Xte, yte
+
+
+def accuracy_identity():
+    """Fig. 2: integer vs float predictions identical; prob deltas ~n/2^32."""
+    from repro.core.ensemble import predict_float, predict_integer
+    from repro.core.fixedpoint import fixed_to_prob_np
+
+    for dname, data in _datasets().items():
+        for n_trees in (1, 10, 50, 100):
+            t0 = time.perf_counter()
+            rf, packed, Xte, yte = _forest(data, n_trees, depth=6)
+            _, predf = predict_float(packed, Xte)
+            acc, predi = predict_integer(packed, Xte)
+            identical = bool((np.asarray(predf) == np.asarray(predi)).all())
+            oracle = rf.predict_proba(Xte)
+            delta = np.abs(
+                fixed_to_prob_np(np.asarray(acc), n_trees) - oracle
+            ).max()
+            us = (time.perf_counter() - t0) * 1e6
+            emit(
+                f"fig2_identity_{dname}_t{n_trees}",
+                us,
+                f"identical={identical};max_prob_delta={delta:.3e}",
+            )
+            assert identical
+
+
+def perf_float_flint_integer():
+    """Fig. 3: relative runtime of float / flint / integer paths."""
+    from repro.core.ensemble import make_predict_fn
+
+    for dname, data in _datasets().items():
+        for n_trees in (10, 50):
+            rf, packed, Xte, yte = _forest(data, n_trees, depth=7)
+            Xte = Xte[:4096]
+            times = {}
+            for mode in ("float", "flint", "integer"):
+                fn = make_predict_fn(packed, mode)
+                times[mode] = _time(fn, Xte)
+            speedup = times["float"] / times["integer"]
+            emit(
+                f"fig3_perf_{dname}_t{n_trees}_float", times["float"] / len(Xte),
+                f"us_per_row",
+            )
+            emit(
+                f"fig3_perf_{dname}_t{n_trees}_flint", times["flint"] / len(Xte),
+                f"rel={times['float']/times['flint']:.3f}x",
+            )
+            emit(
+                f"fig3_perf_{dname}_t{n_trees}_integer", times["integer"] / len(Xte),
+                f"speedup_vs_float={speedup:.3f}x",
+            )
+
+
+def gbt_identity():
+    """GBT support (paper Sec. II-B): integer-only signed-margin
+    accumulation agrees with the float GBT on argmax."""
+    from repro.trees.gbt import GradientBoostedClassifier, pack_gbt, predict_gbt_integer
+
+    data = _datasets()["shuttle"]
+    Xtr, ytr, Xte, yte = data
+    t0 = time.perf_counter()
+    gbt = GradientBoostedClassifier(n_estimators=12, max_depth=4, seed=0).fit(
+        Xtr[:8000], ytr[:8000]
+    )
+    packed = pack_gbt(gbt)
+    pred_f = gbt.predict(Xte[:2000])
+    pred_i = predict_gbt_integer(packed, Xte[:2000])
+    agree = (pred_f == pred_i).mean()
+    acc = (pred_i == yte[:2000]).mean()
+    emit(
+        "gbt_identity", (time.perf_counter() - t0) * 1e6,
+        f"agree={agree:.4f};acc={acc:.4f};scale={packed.scale:.3e}",
+    )
+    assert agree >= 0.999
+
+
+def perf_native_c():
+    """Fig. 3, faithfully: the emitted if-else C compiled -O3 and timed on
+    this host's x86 core — float vs FlInt vs InTreeger, both datasets.
+    (The paper's ARM/RISC-V columns need those ISAs; noted in EXPERIMENTS.)"""
+    import shutil
+
+    if shutil.which("gcc") is None:
+        emit("fig3_native_c", 0, "gcc unavailable; skipped")
+        return
+    from repro.codegen.native_bench import compile_and_time
+
+    for dname, data in _datasets().items():
+        for n_trees in (10, 50):
+            rf, packed, Xte, yte = _forest(data, n_trees, depth=7)
+            X = Xte[:4096]
+            res = {m: compile_and_time(packed, X, m) for m in ("float", "flint", "integer")}
+            # all three must agree on every argmax (checksum = sum of classes)
+            assert res["float"]["checksum"] == res["integer"]["checksum"] == res["flint"]["checksum"]
+            f, fl, i = (res[m]["ns_per_row"] / 1e3 for m in ("float", "flint", "integer"))
+            emit(f"fig3c_{dname}_t{n_trees}_float", f, "us_per_row")
+            emit(f"fig3c_{dname}_t{n_trees}_flint", fl, f"rel={f/fl:.3f}x")
+            emit(
+                f"fig3c_{dname}_t{n_trees}_integer", i,
+                f"speedup_vs_float={f/i:.3f}x;binary_bytes={res['integer']['binary_bytes']}",
+            )
+
+
+def instruction_count_proxy():
+    """IV-C analog: compiled op counts per implementation (no ISA on TPU —
+    HLO instruction count is the portable analogue)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.ensemble import ensemble_device_arrays, _predict
+    from repro.core.flint import float_to_key
+
+    data = _datasets()["shuttle"]
+    rf, packed, Xte, yte = _forest(data, 20, depth=6)
+    x = jnp.asarray(Xte[:512], jnp.float32)
+    counts = {}
+    for mode, acc_dtype in (("float", jnp.float32), ("integer", jnp.uint32)):
+        arrays = ensemble_device_arrays(packed, mode)
+        xx = x if mode == "float" else float_to_key(x)
+        lowered = jax.jit(
+            lambda a, v: _predict(a, v, packed.max_depth, acc_dtype)
+        ).lower(arrays, xx)
+        txt = lowered.compile().as_text()
+        counts[mode] = sum(1 for l in txt.splitlines() if "=" in l and "%" in l)
+    emit(
+        "ivc_hlo_ops_float", counts["float"],
+        f"integer={counts['integer']};ratio={counts['integer']/counts['float']:.3f}",
+    )
+
+
+def memory_footprint():
+    """IV-E analog: deployable artifact size (the MCU had 43.5 kB total)."""
+    from repro.codegen.c_emitter import emit_c
+
+    data = _datasets()["shuttle"]
+    rf, packed, Xte, _ = _forest(data, 30, depth=5)  # the paper's MCU config
+    int_bytes = packed.nbytes_integer()
+    float_bytes = packed.nbytes_float()
+    c_src = len(emit_c(packed, mode="integer").encode())
+    emit(
+        "ive_artifact_bytes", int_bytes,
+        f"float_bytes={float_bytes};ratio={int_bytes/float_bytes:.3f};c_source={c_src}",
+    )
+
+
+def energy_model():
+    """IV-F: the paper's E_saved formula with measured runtime ratio.
+
+    The paper measured T_float=19.36s, T_int=7.79s, P_high=2.81W,
+    P_low=1.81W -> 21.3% saved.  We plug OUR measured runtimes into the SAME
+    formula with the paper's power constants (no power meter in container).
+    """
+    import shutil
+
+    data = _datasets()["shuttle"]
+    rf, packed, Xte, yte = _forest(data, 50, depth=7)  # paper's energy config
+    Xte = Xte[:4096]
+    if shutil.which("gcc"):
+        # the faithful measurement: emitted if-else C at -O3 (paper IV-F)
+        from repro.codegen.native_bench import compile_and_time
+
+        t_float = compile_and_time(packed, Xte, "float")["ns_per_row"]
+        t_int = compile_and_time(packed, Xte, "integer")["ns_per_row"]
+    else:
+        from repro.core.ensemble import make_predict_fn
+
+        t_float = _time(make_predict_fn(packed, "float"), Xte)
+        t_int = _time(make_predict_fn(packed, "integer"), Xte)
+    p_high, p_low = 2.81, 1.81
+    e_saved = 1 - (t_int * p_high + (t_float - t_int) * p_low) / (t_float * p_high)
+    emit(
+        "ivf_energy_saved", t_int,
+        f"t_float={t_float:.1f};t_int={t_int:.1f};E_saved={e_saved*100:.1f}%"
+        f";paper=21.3%",
+    )
+    # paper's own constants reproduce the paper's number (formula check)
+    e_paper = 1 - (7.79 * 2.81 + (19.36 - 7.79) * 1.81) / (19.36 * 2.81)
+    assert abs(e_paper - 0.213) < 0.005
+
+
+def kernel_identity():
+    """Pallas kernel (interpret mode) == jnp oracle; per-row cost of the jnp
+    deployment path (interpret-mode kernel timing is not meaningful)."""
+    from repro.core.ensemble import make_predict_fn
+    from repro.kernels.ops import packed_predict_integer
+
+    data = _datasets()["shuttle"]
+    rf, packed, Xte, _ = _forest(data, 16, depth=6)
+    Xte = Xte[:1024]
+    fn = make_predict_fn(packed, "integer")
+    scores_ref, _ = fn(Xte)
+    scores_k, _ = packed_predict_integer(packed, Xte, block_b=256)
+    same = bool((np.asarray(scores_ref) == np.asarray(scores_k)).all())
+    us = _time(fn, Xte, reps=3)
+    emit("kernel_identity", us / len(Xte), f"bit_identical={same}")
+    assert same
+
+
+def roofline_table():
+    """§Roofline: summarize every dry-run artifact (see EXPERIMENTS.md)."""
+    dd = ART / "dryrun"
+    if not dd.exists():
+        emit("roofline_table", 0, "no dryrun artifacts; run repro.launch.dryrun --all")
+        return
+    recs = [json.loads(p.read_text()) for p in sorted(dd.glob("*.json"))]
+    ok = [r for r in recs if r.get("ok")]
+    for r in ok:
+        t = r["roofline"]
+        emit(
+            f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+            t["step_time_lb_s"] * 1e6,
+            f"dom={t['dominant']};compute_s={t['compute_s']:.3e};"
+            f"memory_s={t['memory_s']:.3e};collective_s={t['collective_s']:.3e};"
+            f"useful={t['useful_ratio']:.2f};mfu_bound={t['mfu_bound']:.3f}",
+        )
+    emit("roofline_cells_ok", len(ok), f"total={len(recs)}")
+
+
+def main() -> None:
+    for fn in (
+        accuracy_identity,
+        gbt_identity,
+        perf_float_flint_integer,
+        perf_native_c,
+        instruction_count_proxy,
+        memory_footprint,
+        energy_model,
+        kernel_identity,
+        roofline_table,
+    ):
+        fn()
+    out = ART / "bench_results.csv"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text("name,us_per_call,derived\n" + "\n".join(ROWS) + "\n")
+    print(f"# wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

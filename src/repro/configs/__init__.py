@@ -1,0 +1,3 @@
+from repro.configs.base import ARCHS, ModelConfig, get_config, smoke_config
+
+__all__ = ["ARCHS", "ModelConfig", "get_config", "smoke_config"]

@@ -1,0 +1,35 @@
+# The paper's primary contribution: integer-only tree-ensemble inference.
+#   flint.py      — order-preserving float32<->int32 key transform (Sec. II-D)
+#   fixedpoint.py — 2^32/n fixed-point probability conversion (Sec. III-A)
+#   packing.py    — ensemble -> dense node tables (TPU analogue of codegen)
+#   ensemble.py   — float / flint / integer inference paths (pure jnp)
+from repro.core.ensemble import (
+    ensemble_device_arrays,
+    integer_probs,
+    make_predict_fn,
+    predict_flint,
+    predict_float,
+    predict_integer,
+)
+from repro.core.fixedpoint import fixed_to_prob, max_abs_error, prob_to_fixed_np, scale_for
+from repro.core.flint import float_to_key, float_to_key_np, key_to_float, key_to_float_np
+from repro.core.packing import PackedEnsemble, pack_forest
+
+__all__ = [
+    "ensemble_device_arrays",
+    "integer_probs",
+    "make_predict_fn",
+    "predict_flint",
+    "predict_float",
+    "predict_integer",
+    "fixed_to_prob",
+    "max_abs_error",
+    "prob_to_fixed_np",
+    "scale_for",
+    "float_to_key",
+    "float_to_key_np",
+    "key_to_float",
+    "key_to_float_np",
+    "PackedEnsemble",
+    "pack_forest",
+]

@@ -1,0 +1,154 @@
+"""Ensemble inference paths: float baseline, FlInt, and integer-only.
+
+Mirrors the paper's three evaluated implementations (Sec. IV):
+  * ``float``   — float32 threshold compares, float32 probability adds
+                  (the "naive" Listing 4 baseline),
+  * ``flint``   — int32 key compares, float32 probability adds (FlInt [26]),
+  * ``integer`` — int32 key compares, uint32 fixed-point adds (InTreeger).
+
+On TPU the if-else cascade becomes a breadth-batched node-table walk: every
+example advances one level per step via vectorized gathers; leaves self-loop.
+This module is the pure-jnp reference; ``repro.kernels.tree_traverse`` is the
+Pallas VMEM-tiled version of the ``integer`` path and must match it exactly.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fixedpoint import fixed_to_prob
+from repro.core.flint import float_to_key
+from repro.core.packing import PackedEnsemble
+
+MODES = ("float", "flint", "integer")
+
+
+def ensemble_device_arrays(packed: PackedEnsemble, mode: str) -> dict:
+    """The deployment artifact for one mode, as a dict of jnp arrays."""
+    base = dict(
+        feature=jnp.asarray(packed.feature),
+        left=jnp.asarray(packed.left),
+        right=jnp.asarray(packed.right),
+    )
+    if mode == "float":
+        base["threshold"] = jnp.asarray(packed.threshold)
+        base["leaf"] = jnp.asarray(packed.leaf_probs)
+    elif mode == "flint":
+        base["threshold"] = jnp.asarray(packed.threshold_key)
+        base["leaf"] = jnp.asarray(packed.leaf_probs)
+    elif mode == "integer":
+        base["threshold"] = jnp.asarray(packed.threshold_key)
+        base["leaf"] = jnp.asarray(packed.leaf_fixed)
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    return base
+
+
+def _traverse_tree(feature_t, thr_t, left_t, right_t, x, depth: int):
+    """Walk one tree for a batch.  ``x``: (B, F) in the same domain as thr."""
+    b = x.shape[0]
+    node0 = jnp.zeros(b, jnp.int32)
+
+    def body(_, node):
+        feat = feature_t[node]  # (B,) gather
+        thr = thr_t[node]
+        xv = jnp.take_along_axis(x, jnp.clip(feat, 0)[:, None], axis=1)[:, 0]
+        go_left = xv <= thr  # paper Listing 2 semantics
+        # leaves have left == right == self, so they self-loop for free
+        return jnp.where(go_left, left_t[node], right_t[node])
+
+    return jax.lax.fori_loop(0, depth, body, node0)
+
+
+@partial(jax.jit, static_argnames=("depth", "acc_dtype"))
+def _predict(arrays, x, depth: int, acc_dtype):
+    b = x.shape[0]
+    c = arrays["leaf"].shape[-1]
+    acc0 = jnp.zeros((b, c), acc_dtype)
+
+    def per_tree(acc, tree):
+        feature_t, thr_t, left_t, right_t, leaf_t = tree
+        node = _traverse_tree(feature_t, thr_t, left_t, right_t, x, depth)
+        return acc + leaf_t[node].astype(acc_dtype), None
+
+    acc, _ = jax.lax.scan(
+        per_tree,
+        acc0,
+        (
+            arrays["feature"],
+            arrays["threshold"],
+            arrays["left"],
+            arrays["right"],
+            arrays["leaf"],
+        ),
+    )
+    return acc
+
+
+def predict_float(packed: PackedEnsemble, X, arrays=None):
+    """float32 path.  Returns (probs f32 (B,C), preds int32)."""
+    arrays = arrays or ensemble_device_arrays(packed, "float")
+    x = jnp.asarray(X, jnp.float32)
+    acc = _predict(arrays, x, packed.max_depth, jnp.float32)
+    probs = acc / packed.n_trees
+    return probs, jnp.argmax(probs, axis=1).astype(jnp.int32)
+
+
+def predict_flint(packed: PackedEnsemble, X, arrays=None):
+    """FlInt path: integer compares, float prob accumulation."""
+    arrays = arrays or ensemble_device_arrays(packed, "flint")
+    keys = float_to_key(jnp.asarray(X, jnp.float32))
+    acc = _predict(arrays, keys, packed.max_depth, jnp.float32)
+    probs = acc / packed.n_trees
+    return probs, jnp.argmax(probs, axis=1).astype(jnp.int32)
+
+
+def predict_integer(packed: PackedEnsemble, X, arrays=None):
+    """InTreeger path: integer compares + uint32 fixed-point accumulation.
+
+    Returns (acc uint32 (B,C), preds int32).  ``acc`` never overflows: each
+    tree contributes < scale = floor((2**32-1)/n) and there are n trees.
+    """
+    arrays = arrays or ensemble_device_arrays(packed, "integer")
+    keys = float_to_key(jnp.asarray(X, jnp.float32))
+    acc = _predict(arrays, keys, packed.max_depth, jnp.uint32)
+    return acc, jnp.argmax(acc, axis=1).astype(jnp.int32)
+
+
+def integer_probs(packed: PackedEnsemble, acc):
+    """Reconstruct ensemble-average probabilities from the uint32 scores."""
+    return fixed_to_prob(acc, packed.n_trees)
+
+
+def make_predict_fn(packed: PackedEnsemble, mode: str):
+    """Close over device arrays; return a jitted X -> (scores, preds) fn."""
+    arrays = ensemble_device_arrays(packed, mode)
+    depth = packed.max_depth
+    n = packed.n_trees
+
+    if mode == "float":
+
+        def fn(x):
+            acc = _predict(arrays, jnp.asarray(x, jnp.float32), depth, jnp.float32)
+            probs = acc / n
+            return probs, jnp.argmax(probs, axis=1).astype(jnp.int32)
+
+    elif mode == "flint":
+
+        def fn(x):
+            keys = float_to_key(jnp.asarray(x, jnp.float32))
+            acc = _predict(arrays, keys, depth, jnp.float32)
+            probs = acc / n
+            return probs, jnp.argmax(probs, axis=1).astype(jnp.int32)
+
+    else:
+
+        def fn(x):
+            keys = float_to_key(jnp.asarray(x, jnp.float32))
+            acc = _predict(arrays, keys, depth, jnp.uint32)
+            return acc, jnp.argmax(acc, axis=1).astype(jnp.int32)
+
+    return jax.jit(fn)

@@ -1,0 +1,73 @@
+"""FlInt: order-preserving float32 <-> int32 key transform.
+
+The paper (Sec. II-D / III) inherits FlInt [Hakert et al., DATE'24]: replace
+every floating-point threshold comparison ``x <= t`` in a decision tree with an
+integer comparison of the IEEE-754 *bit patterns*.  For non-negative floats the
+raw bit pattern is already monotone; to obtain a total order over the full
+float range (negative thresholds occur in real datasets) we apply the standard
+sign-fix:
+
+    b   = bitcast_int32(f)
+    key = b               if b >= 0          (positive floats, +0)
+          INT32_MIN - b   otherwise          (negative floats, -0)
+
+Properties (hypothesis-tested in tests/test_flint.py):
+  * strictly monotone:  f1 < f2  <=>  key(f1) < key(f2)   (finite floats)
+  * key(-0.0) == key(+0.0) == 0                            (consistent with ==)
+  * for f >= 0, key(f) == bitcast_int32(f)  (exactly the FlInt paper's form,
+    so C codegen emits the same immediates the paper shows in Listing 2)
+  * exactly invertible.
+
+All ops are int32 adds/compares: on TPU they run on the VPU with no float
+pipeline involvement; in the generated C they are plain integer instructions,
+which is the paper's architecture-agnostic goal.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+_INT32_MIN = np.int32(-2147483648)
+
+
+def float_to_key(f):
+    """Map float32 array -> order-preserving int32 keys (JAX)."""
+    f = jnp.asarray(f, jnp.float32)
+    b = jax_bitcast_i32(f)
+    return jnp.where(b < 0, _INT32_MIN - b, b)
+
+
+def key_to_float(k):
+    """Inverse of :func:`float_to_key` (JAX). key(-0.0) inverts to +0.0."""
+    k = jnp.asarray(k, jnp.int32)
+    b = jnp.where(k < 0, _INT32_MIN - k, k)
+    return jax_bitcast_f32(b)
+
+
+def jax_bitcast_i32(f):
+    import jax.lax as lax
+
+    return lax.bitcast_convert_type(jnp.asarray(f, jnp.float32), jnp.int32)
+
+
+def jax_bitcast_f32(i):
+    import jax.lax as lax
+
+    return lax.bitcast_convert_type(jnp.asarray(i, jnp.int32), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# numpy variants (used at codegen/packing time, outside of jit)
+# ---------------------------------------------------------------------------
+
+def float_to_key_np(f: np.ndarray) -> np.ndarray:
+    b = np.asarray(f, np.float32).view(np.int32)
+    # int32 wraparound is intended; compute in int64 then cast to be explicit.
+    neg = (np.int64(_INT32_MIN) - b.astype(np.int64)).astype(np.int32)
+    return np.where(b < 0, neg, b)
+
+
+def key_to_float_np(k: np.ndarray) -> np.ndarray:
+    k = np.asarray(k, np.int32)
+    b = np.where(k < 0, (np.int64(_INT32_MIN) - k.astype(np.int64)).astype(np.int32), k)
+    return b.view(np.float32)

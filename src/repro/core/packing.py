@@ -1,0 +1,93 @@
+"""Pack a trained ensemble into dense, TPU-friendly node tables.
+
+This is the TPU analogue of the paper's codegen step: instead of emitting
+if-else C, we emit *tensors*.  All per-node quantities are padded to the max
+node count across trees; padding nodes are self-looping leaves with zero
+probability mass, so they are semantically inert.
+
+The integer artifacts produced here are exactly the paper's:
+  * ``threshold_key``: FlInt int32 keys of the float thresholds,
+  * ``leaf_fixed``:  uint32 fixed-point leaf probabilities at scale
+    ``floor((2**32-1)/n_trees)`` (Sec. III-A), overflow-free by construction.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.fixedpoint import prob_to_fixed_np, scale_for
+from repro.core.flint import float_to_key_np
+
+
+@dataclass
+class PackedEnsemble:
+    feature: np.ndarray  # (T, N) int32, -1 for leaf
+    threshold: np.ndarray  # (T, N) float32
+    threshold_key: np.ndarray  # (T, N) int32 (FlInt keys)
+    left: np.ndarray  # (T, N) int32
+    right: np.ndarray  # (T, N) int32
+    leaf_probs: np.ndarray  # (T, N, C) float32 (zeros on internal/pad nodes)
+    leaf_fixed: np.ndarray  # (T, N, C) uint32
+    n_trees: int
+    n_classes: int
+    n_features: int
+    max_depth: int  # walk length that guarantees leaf arrival
+
+    @property
+    def scale(self) -> int:
+        return scale_for(self.n_trees)
+
+    def nbytes_integer(self) -> int:
+        """Bytes of the integer-only deployment artifact."""
+        return (
+            self.feature.nbytes
+            + self.threshold_key.nbytes
+            + self.left.nbytes
+            + self.right.nbytes
+            + self.leaf_fixed.nbytes
+        )
+
+    def nbytes_float(self) -> int:
+        """Bytes of the float deployment artifact."""
+        return (
+            self.feature.nbytes
+            + self.threshold.nbytes
+            + self.left.nbytes
+            + self.right.nbytes
+            + self.leaf_probs.nbytes
+        )
+
+
+def pack_forest(forest) -> PackedEnsemble:
+    trees = forest.trees_
+    T = len(trees)
+    C = forest.n_classes_
+    N = max(t.n_nodes for t in trees)
+    feature = np.full((T, N), -1, np.int32)
+    threshold = np.zeros((T, N), np.float32)
+    left = np.tile(np.arange(N, dtype=np.int32), (T, 1))
+    right = left.copy()
+    probs = np.zeros((T, N, C), np.float64)
+    for i, t in enumerate(trees):
+        n = t.n_nodes
+        feature[i, :n] = t.feature
+        threshold[i, :n] = t.threshold
+        left[i, :n] = t.left
+        right[i, :n] = t.right
+        is_leaf = t.feature < 0
+        probs[i, :n][is_leaf] = t.leaf_probs[is_leaf]
+    fixed = prob_to_fixed_np(probs, T)
+    return PackedEnsemble(
+        feature=feature,
+        threshold=threshold,
+        threshold_key=float_to_key_np(threshold),
+        left=left,
+        right=right,
+        leaf_probs=probs.astype(np.float32),
+        leaf_fixed=fixed,
+        n_trees=T,
+        n_classes=C,
+        n_features=forest.n_features_,
+        max_depth=max(t.depth for t in trees),
+    )

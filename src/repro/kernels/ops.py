@@ -1,0 +1,99 @@
+"""Jitted public wrapper around the tree-traversal Pallas kernel.
+
+Handles padding (batch to ``block_b`` multiples, trees to ``block_t``
+multiples with inert self-looping zero-probability trees), VMEM budgeting,
+and exposes a PackedEnsemble-level entry point.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.flint import float_to_key
+from repro.core.packing import PackedEnsemble
+from repro.kernels.tree_traverse import tree_traverse_pallas
+
+_VMEM_BUDGET_BYTES = 8 * 1024 * 1024  # stay well under ~16 MiB v5e VMEM
+
+
+def pick_blocks(b, t, n, f, c, block_b=256):
+    """Choose (block_b, block_t) so the working set fits the VMEM budget."""
+    block_b = min(block_b, b)
+    for block_t in range(t, 0, -1):
+        words = block_b * f + block_t * n * 4 + block_t * n * c + block_b * c
+        if words * 4 <= _VMEM_BUDGET_BYTES:
+            return block_b, block_t
+    return block_b, 1
+
+
+@partial(jax.jit, static_argnames=("depth", "block_b", "block_t", "impl", "interpret"))
+def _traverse_padded(x_keys, feature, key, left, right, leaf, *, depth, block_b, block_t, impl, interpret):
+    return tree_traverse_pallas(
+        x_keys, feature, key, left, right, leaf,
+        depth=depth, block_b=block_b, block_t=block_t, impl=impl, interpret=interpret,
+    )
+
+
+def tree_predict_integer(
+    x_keys,
+    feature,
+    threshold_key,
+    left,
+    right,
+    leaf_fixed,
+    *,
+    depth: int,
+    block_b: int = 256,
+    block_t: int | None = None,
+    impl: str = "gather",
+    interpret: bool = True,
+):
+    """Integer ensemble inference via the Pallas kernel, any B/T.
+
+    Returns (B, C) uint32 scores, bit-identical to ``ref.tree_predict_integer_ref``.
+    """
+    x_keys = jnp.asarray(x_keys, jnp.int32)
+    b, f = x_keys.shape
+    t, n = feature.shape
+    c = leaf_fixed.shape[-1]
+    auto_b, auto_t = pick_blocks(b, t, n, f, c, block_b)
+    block_b = min(block_b, auto_b)
+    block_t = block_t or auto_t
+
+    pad_b = (-b) % block_b
+    pad_t = (-t) % block_t
+    if pad_b:
+        x_keys = jnp.pad(x_keys, ((0, pad_b), (0, 0)))
+    if pad_t:
+        # inert trees: all nodes are self-looping leaves with zero mass
+        feature = jnp.pad(feature, ((0, pad_t), (0, 0)), constant_values=-1)
+        threshold_key = jnp.pad(threshold_key, ((0, pad_t), (0, 0)))
+        selfloop = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (pad_t, n))
+        left = jnp.concatenate([left, selfloop], axis=0)
+        right = jnp.concatenate([right, selfloop], axis=0)
+        leaf_fixed = jnp.pad(leaf_fixed, ((0, pad_t), (0, 0), (0, 0)))
+
+    out = _traverse_padded(
+        x_keys, feature, threshold_key, left, right, leaf_fixed,
+        depth=depth, block_b=block_b, block_t=block_t, impl=impl, interpret=interpret,
+    )
+    return out[:b]
+
+
+def packed_predict_integer(packed: PackedEnsemble, X, **kw):
+    """PackedEnsemble entry point: float features in, (scores, preds) out."""
+    keys = float_to_key(jnp.asarray(X, jnp.float32))
+    acc = tree_predict_integer(
+        keys,
+        jnp.asarray(packed.feature),
+        jnp.asarray(packed.threshold_key),
+        jnp.asarray(packed.left),
+        jnp.asarray(packed.right),
+        jnp.asarray(packed.leaf_fixed),
+        depth=packed.max_depth,
+        **kw,
+    )
+    return acc, jnp.argmax(acc, axis=1).astype(jnp.int32)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for the tree-traversal kernel.
+
+Standalone (does not import the kernel) so kernel tests can assert
+``assert_allclose(kernel(...), ref(...))`` against an independent
+implementation.  Math is identical to ``repro.core.ensemble.predict_integer``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_predict_integer_ref(x_keys, feature, threshold_key, left, right, leaf_fixed, depth: int):
+    """Integer-only ensemble inference.
+
+    Args:
+      x_keys: (B, F) int32 FlInt keys of the feature rows.
+      feature: (T, N) int32, -1 on leaves.
+      threshold_key: (T, N) int32.
+      left/right: (T, N) int32 child indices (self on leaves).
+      leaf_fixed: (T, N, C) uint32 fixed-point leaf probabilities.
+      depth: walk length (>= max tree depth).
+
+    Returns: (B, C) uint32 accumulated class scores.
+    """
+    b = x_keys.shape[0]
+    c = leaf_fixed.shape[-1]
+
+    def per_tree(acc, tree):
+        feat_t, thr_t, left_t, right_t, leaf_t = tree
+        node = jnp.zeros(b, jnp.int32)
+
+        def body(_, node):
+            f = feat_t[node]
+            thr = thr_t[node]
+            xv = jnp.take_along_axis(x_keys, jnp.clip(f, 0)[:, None], axis=1)[:, 0]
+            return jnp.where(xv <= thr, left_t[node], right_t[node])
+
+        node = jax.lax.fori_loop(0, depth, body, node)
+        return acc + leaf_t[node], None
+
+    acc0 = jnp.zeros((b, c), jnp.uint32)
+    acc, _ = jax.lax.scan(per_tree, acc0, (feature, threshold_key, left, right, leaf_fixed))
+    return acc

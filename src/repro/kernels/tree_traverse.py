@@ -1,0 +1,141 @@
+"""Pallas TPU kernel: batched integer-only tree-ensemble traversal.
+
+TPU adaptation of the paper's if-else trees (DESIGN.md Sec. 2): branches
+become breadth-batched node-table walks.  One grid cell processes a block of
+``block_b`` examples against a block of ``block_t`` trees with all node tables
+resident in VMEM; examples advance one tree level per step; leaves self-loop.
+Class scores are uint32 fixed-point sums (paper Sec. III-A) — overflow-free by
+construction, so accumulation across tree-blocks is plain integer addition
+with no rescaling.
+
+Grid: ``(B/block_b, T/block_t)`` with the tree dimension innermost, so each
+output block stays resident while all tree-blocks accumulate into it
+(classic revisited-output reduction pattern).
+
+VMEM budget per cell (int32/uint32 words):
+    x block:      block_b * F
+    node tables:  block_t * N * 4          (feature, key, left, right)
+    leaf table:   block_t * N * C
+    out block:    block_b * C
+For the paper-scale ensembles (T<=100, depth<=8 -> N<=511, C<=7) everything
+fits in well under 1 MiB, far below the ~16 MiB v5e VMEM; ``ops.py`` checks
+the budget and splits the tree dimension when needed.
+
+Two gather strategies, selected statically:
+  * ``impl="gather"`` (default): ``jnp.take`` one-dim table gathers — lowers
+    to Mosaic ``dynamic_gather`` (supported on v4+) and is O(block_b) work per
+    level.
+  * ``impl="onehot"``: branch-free masked reductions (compare-iota + select +
+    sum) — O(block_b * N) work per level but uses only elementwise VPU ops;
+    portable to any Pallas target.  This mirrors how the paper leans on the
+    most basic ALU ops (load/add/compare) instead of specialized units.
+Both are validated against ``ref.py`` in interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gather_1d(row, idx, impl: str):
+    """row: (N,), idx: (B,) int32 -> (B,)."""
+    if impl == "gather":
+        return jnp.take(row, idx, axis=0)
+    # one-hot: (B, N) mask against iota, reduce over N.
+    n = row.shape[0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], n), 1)
+    mask = iota == idx[:, None]
+    return jnp.sum(jnp.where(mask, row[None, :], jnp.zeros_like(row[None, :])), axis=1)
+
+
+def _gather_rows(table, idx, impl: str):
+    """table: (N, C), idx: (B,) -> (B, C)."""
+    if impl == "gather":
+        return jnp.take(table, idx, axis=0)
+    n, c = table.shape
+    iota = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], n), 1)
+    mask = (iota == idx[:, None])[:, :, None]
+    return jnp.sum(jnp.where(mask, table[None], jnp.zeros_like(table[None])), axis=1)
+
+
+def _gather_feature(x, feat, impl: str):
+    """x: (B, F), feat: (B,) -> (B,) = x[i, feat[i]]."""
+    if impl == "gather":
+        return jnp.take_along_axis(x, feat[:, None], axis=1)[:, 0]
+    f = x.shape[1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    mask = iota == feat[:, None]
+    return jnp.sum(jnp.where(mask, x, jnp.zeros_like(x)), axis=1)
+
+
+def _kernel(x_ref, feat_ref, key_ref, left_ref, right_ref, leaf_ref, out_ref, *, depth, block_t, impl):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...]  # (block_b, F) int32 keys
+    bb = x.shape[0]
+
+    def per_tree(t, acc):
+        feat_t = feat_ref[t, :]
+        key_t = key_ref[t, :]
+        left_t = left_ref[t, :]
+        right_t = right_ref[t, :]
+        node = jnp.zeros((bb,), jnp.int32)
+
+        def level(_, node):
+            f = _gather_1d(feat_t, node, impl)
+            thr = _gather_1d(key_t, node, impl)
+            xv = _gather_feature(x, jnp.maximum(f, 0), impl)
+            nl = _gather_1d(left_t, node, impl)
+            nr = _gather_1d(right_t, node, impl)
+            return jnp.where(xv <= thr, nl, nr)
+
+        node = jax.lax.fori_loop(0, depth, level, node)
+        return acc + _gather_rows(leaf_ref[t, :, :], node, impl)
+
+    acc = jax.lax.fori_loop(0, block_t, per_tree, jnp.zeros_like(out_ref[...]))
+    out_ref[...] += acc
+
+
+def tree_traverse_pallas(
+    x_keys,
+    feature,
+    threshold_key,
+    left,
+    right,
+    leaf_fixed,
+    *,
+    depth: int,
+    block_b: int = 256,
+    block_t: int | None = None,
+    impl: str = "gather",
+    interpret: bool = True,
+):
+    """Raw pallas_call; shapes must already divide evenly (see ops.py)."""
+    b, f = x_keys.shape
+    t, n = feature.shape
+    c = leaf_fixed.shape[-1]
+    block_t = block_t or t
+    assert b % block_b == 0 and t % block_t == 0
+    grid = (b // block_b, t // block_t)
+
+    kernel = functools.partial(_kernel, depth=depth, block_t=block_t, impl=impl)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, f), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_t, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_t, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_t, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_t, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_t, n, c), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, c), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, c), jnp.uint32),
+        interpret=interpret,
+    )(x_keys, feature, threshold_key, left, right, leaf_fixed)

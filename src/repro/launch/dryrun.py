@@ -1,0 +1,192 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver.
+
+Lowers + compiles every (architecture x input-shape) cell on the production
+meshes — 16x16 single pod and 2x16x16 multi-pod — and records
+memory_analysis / cost_analysis / collective-bytes to JSON for the roofline
+table (EXPERIMENTS.md §Dry-run / §Roofline).
+
+The two lines above MUST stay the first statements in this file: jax locks
+the device count at first init, and only the dry-run may see 512 placeholder
+host devices (smoke tests and benches see 1).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-27b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] \
+      --out benchmarks/artifacts/dryrun
+"""
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ARCHS, get_config
+from repro.launch import jaxpr_cost
+from repro.launch import specs as sp
+from repro.launch.hlo_analysis import collective_bytes, flops_and_bytes, memory_stats
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import model_flops, terms
+from repro.launch.shapes import SHAPES, applicable_shapes
+from repro.models import transformer as tfm
+from repro.train import optimizer as opt
+from repro.train.step import make_train_step
+
+
+def lower_cell(arch: str, shape_name: str, mesh):
+    """Build abstract args and lower the right step function for the cell.
+
+    Returns (lowered, jaxpr_cost_dict) — the jaxpr walk supplies the
+    trip-count-aware global flops/bytes (see jaxpr_cost.py).
+    """
+    cfg = get_config(arch)
+    if cfg.family == "trees":
+        tables = sp.tree_table_specs(cfg, mesh)
+        x = sp.tree_input_specs(cfg, shape_name, mesh)
+        from repro.core.serving import tree_serve_step
+
+        depth = cfg.tree_depth
+
+        def serve_trees(tables, x_keys):
+            return tree_serve_step(tables, x_keys, depth)
+
+        jc = jaxpr_cost.analyze(serve_trees, tables, x)
+        return jax.jit(serve_trees).lower(tables, x), jc
+
+    mode = SHAPES[shape_name]["mode"]
+    params = sp.params_specs(cfg, mesh)
+    if mode == "train":
+        batch = sp.batch_specs(cfg, shape_name, mesh, with_labels=True)
+        ostate = sp.opt_state_specs(cfg, mesh)
+        step = make_train_step(cfg, opt.AdamWConfig())
+        out_sh = (
+            jax.tree.map(lambda s: s.sharding, params),
+            jax.tree.map(lambda s: s.sharding, ostate),
+            None,
+        )
+        jc = jaxpr_cost.analyze(step, params, ostate, batch)
+        return (
+            jax.jit(step, donate_argnums=(0, 1), out_shardings=out_sh).lower(
+                params, ostate, batch
+            ),
+            jc,
+        )
+    if mode == "prefill":
+        batch = sp.batch_specs(cfg, shape_name, mesh, with_labels=False)
+        if cfg.encoder_only:
+            fn = lambda p, b: tfm.forward_logits(cfg, p, b)
+            jc = jaxpr_cost.analyze(fn, params, batch)
+            return jax.jit(fn).lower(params, batch), jc
+        seq = SHAPES[shape_name]["seq"]
+        fn = lambda p, b: tfm.prefill(cfg, p, b, max_seq=seq)
+        jc = jaxpr_cost.analyze(fn, params, batch)
+        return jax.jit(fn).lower(params, batch), jc
+    # decode
+    cache, (b, s) = sp.cache_specs(cfg, shape_name, mesh)
+    tokens = sp.decode_token_specs(cfg, shape_name, mesh)
+    fn = lambda p, c, t: tfm.decode_step(cfg, p, c, t)
+    cache_sh = jax.tree.map(lambda x: x.sharding, cache)
+    jc = jaxpr_cost.analyze(fn, params, cache, tokens)
+    return (
+        jax.jit(fn, donate_argnums=(1,), out_shardings=(None, cache_sh)).lower(
+            params, cache, tokens
+        ),
+        jc,
+    )
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool, out_dir=None) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = get_config(arch)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "chips": 512 if multi_pod else 256,
+        "ok": False,
+    }
+    from repro.sharding.ops import use_mesh
+
+    t0 = time.time()
+    try:
+        with mesh, use_mesh(mesh):
+            lowered, jc = lower_cell(arch, shape_name, mesh)
+            rec["jaxpr_cost"] = jc
+            rec["lower_s"] = round(time.time() - t0, 1)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 1)
+            rec["cost_xla_reference"] = flops_and_bytes(compiled)
+            rec["memory"] = memory_stats(compiled)
+            rec["collectives"] = collective_bytes(compiled.as_text())
+            rec["model_flops"] = model_flops(cfg, shape_name)
+            rec["roofline"] = terms(rec)
+            rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 1)
+    if out_dir:
+        out_dir = pathlib.Path(out_dir)
+        out_dir.mkdir(parents=True, exist_ok=True)
+        fn = out_dir / f"{arch}__{shape_name}__{mesh_name}.json"
+        fn.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="benchmarks/artifacts/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in ARCHS:
+            for shape in applicable_shapes(get_config(arch)):
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            mesh_name = "2x16x16" if mp else "16x16"
+            out = pathlib.Path(args.out) / f"{arch}__{shape}__{mesh_name}.json"
+            if args.skip_existing and out.exists():
+                prev = json.loads(out.read_text())
+                if prev.get("ok"):
+                    print(f"[skip] {arch} {shape} {mesh_name}")
+                    continue
+            rec = run_cell(arch, shape, multi_pod=mp, out_dir=args.out)
+            if rec["ok"]:
+                r = rec["roofline"]
+                print(
+                    f"[ok]  {arch:20s} {shape:12s} {mesh_name:8s} "
+                    f"lower={rec['lower_s']}s compile={rec['compile_s']}s "
+                    f"dom={r['dominant']:10s} "
+                    f"c/m/x={r['compute_s']:.2e}/{r['memory_s']:.2e}/{r['collective_s']:.2e}s "
+                    f"useful={r['useful_ratio']:.2f}",
+                    flush=True,
+                )
+            else:
+                failures += 1
+                print(f"[FAIL] {arch} {shape} {mesh_name}: {rec['error']}", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,173 @@
+"""Parse compiled (SPMD-partitioned) HLO text for collective traffic.
+
+``compiled.cost_analysis()`` has no collective-bytes entry AND counts while
+bodies once (ignoring trip counts), so we analyze the module text ourselves:
+
+  1. split the module into computations,
+  2. sum collective-op result bytes per computation,
+  3. propagate execution multipliers through the call graph — while ops carry
+     ``backend_config={"known_trip_count":{"n":...}}`` so a collective inside
+     the scanned-layers loop is counted once per layer,
+  4. total = sum over computations of bytes x multiplier.
+
+Shapes in the partitioned module are per-device; the roofline layer uses the
+assignment's formula ``collective_bytes/(chips * link_bw)`` with global bytes
+= per-device x chips, so the chip factors cancel.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.*\{")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    size = _DTYPE_BYTES.get(dtype)
+    if size is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * size
+
+
+def _split_computations(hlo_text: str):
+    comps = {}
+    entry = None
+    name, buf = None, []
+    for line in hlo_text.splitlines():
+        m = _COMP_HEADER_RE.match(line)
+        if m and not line.startswith(" "):
+            if name is not None:
+                comps[name] = buf
+            name = m.group(2)
+            buf = []
+            if m.group(1):
+                entry = name
+        elif name is not None:
+            buf.append(line)
+    if name is not None:
+        comps[name] = buf
+    return comps, entry
+
+
+def _line_collective(line: str):
+    """(op, bytes) if this instruction line is a collective, else None."""
+    if "=" not in line:
+        return None
+    lhs, rhs = line.split("=", 1)
+    rhs = rhs.strip()
+    for c in COLLECTIVE_OPS:
+        if f"{c}-done(" in rhs:
+            return None  # async pair: count the -start only
+        if re.search(r"\b" + re.escape(c) + r"(-start)?\(", rhs):
+            head = rhs.split(c)[0]
+            nbytes = sum(_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(head))
+            return c, nbytes
+    return None
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Trip-count-aware per-device collective bytes by op type."""
+    comps, entry = _split_computations(hlo_text)
+    per_comp = {}
+    edges = defaultdict(list)  # caller -> [(callee, multiplier)]
+    for name, lines in comps.items():
+        agg = defaultdict(int)
+        counts = defaultdict(int)
+        for line in lines:
+            got = _line_collective(line)
+            if got:
+                op, nb = got
+                agg[op] += nb
+                counts[op] += 1
+            if " while(" in line:
+                trip = 1
+                tm = _TRIP_RE.search(line)
+                if tm:
+                    trip = int(tm.group(1))
+                bm = _BODY_RE.search(line)
+                if bm:
+                    edges[name].append((bm.group(1), trip))
+                cm = _COND_RE.search(line)
+                if cm:
+                    edges[name].append((cm.group(1), trip))
+            else:
+                for m in _CALLS_RE.finditer(line):
+                    edges[name].append((m.group(1), 1))
+                bm = _BRANCHES_RE.search(line)
+                if bm:
+                    for b in bm.group(1).split(","):
+                        edges[name].append((b.strip().lstrip("%"), 1))
+        per_comp[name] = (dict(agg), dict(counts))
+
+    mult = defaultdict(float)
+    start = entry or (next(iter(comps)) if comps else None)
+    if start is not None:
+        stack = [(start, 1.0)]
+        while stack:
+            node, k = stack.pop()
+            mult[node] += k
+            for callee, trip in edges.get(node, ()):
+                if callee in comps:
+                    stack.append((callee, k * trip))
+
+    out = defaultdict(float)
+    counts = defaultdict(float)
+    for name, (agg, cnt) in per_comp.items():
+        k = mult.get(name, 0.0)
+        if k == 0.0:
+            continue
+        for op, nb in agg.items():
+            out[op] += nb * k
+        for op, c in cnt.items():
+            counts[op] += c * k
+    result = {op: int(v) for op, v in out.items()}
+    result["total"] = int(sum(out.values()))
+    result["counts"] = {op: int(v) for op, v in counts.items()}
+    return result
+
+
+def flops_and_bytes(compiled) -> dict:
+    """XLA's own aggregate numbers (NOT trip-count-aware — reference only;
+    the roofline uses repro.launch.jaxpr_cost for flops/bytes)."""
+    ca = compiled.cost_analysis() or {}
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "transcendentals": float(ca.get("transcendentals", 0.0)),
+    }
+
+
+def memory_stats(compiled) -> dict:
+    ma = compiled.memory_analysis()
+    keys = (
+        "argument_size_in_bytes",
+        "output_size_in_bytes",
+        "temp_size_in_bytes",
+        "alias_size_in_bytes",
+        "generated_code_size_in_bytes",
+    )
+    return {k: int(getattr(ma, k, 0)) for k in keys}

@@ -1,0 +1,74 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+Hardware constants (TPU v5e-class, per assignment):
+  peak bf16 compute 197 TFLOP/s/chip, HBM 819 GB/s/chip, ICI ~50 GB/s/link.
+
+Sources (see jaxpr_cost.py for why XLA's cost_analysis can't be used):
+  * FLOPs / HBM bytes: trip-count-aware jaxpr walk — *global* quantities,
+  * collective bytes: trip-count-aware HLO parse — *per-device* quantities.
+
+    compute    = flops_global / (chips * PEAK_FLOPS)
+    memory     = bytes_global / (chips * HBM_BW)
+    collective = collective_bytes_global / (chips * LINK_BW)
+               = collective_bytes_per_dev / LINK_BW      (chip factor cancels)
+
+MODEL_FLOPS is the analytic useful work (6·N·D train, 2·N·D forward, with
+N_active for MoE); the ratio MODEL_FLOPS / HLO_FLOPs_global flags
+remat/redundancy waste.
+"""
+from __future__ import annotations
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+LINK_BW = 50e9  # bytes/s / link
+
+from repro.configs.base import ModelConfig
+from repro.launch.shapes import SHAPES, TREE_SHAPES
+
+
+def model_flops(cfg: ModelConfig, shape_name: str) -> float:
+    """Analytic useful FLOPs per step (global)."""
+    if cfg.family == "trees":
+        rows = TREE_SHAPES[shape_name]["rows"]
+        # per (row, tree, level): 1 int compare + 3 gathers + final C adds
+        return float(rows * cfg.n_trees * (cfg.tree_depth * 4 + cfg.n_classes))
+    info = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if info["mode"] == "train":
+        tokens = info["batch"] * info["seq"]
+        return 6.0 * n * tokens
+    if info["mode"] == "prefill":
+        tokens = info["batch"] * info["seq"]
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * info["batch"]
+
+
+def terms(record: dict) -> dict:
+    """record: one dry-run JSON entry (jaxpr_cost global + HLO collectives)."""
+    chips = record["chips"]
+    flops_dev = record["jaxpr_cost"]["flops"] / chips
+    bytes_dev = record["jaxpr_cost"]["bytes_lb"] / chips
+    coll_dev = record["collectives"]["total"]
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_dev / LINK_BW
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", collective_s),
+        key=lambda kv: kv[1],
+    )[0]
+    mf = record.get("model_flops", 0.0)
+    hlo_global = flops_dev * chips
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": (mf / hlo_global) if hlo_global else 0.0,
+        "step_time_lb_s": max(compute_s, memory_s, collective_s),
+        "mfu_bound": (mf / chips / PEAK_FLOPS) / max(compute_s, memory_s, collective_s)
+        if max(compute_s, memory_s, collective_s) > 0
+        else 0.0,
+    }

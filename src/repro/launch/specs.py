@@ -1,0 +1,111 @@
+"""Abstract input/param/cache specs for the dry-run (ShapeDtypeStruct only —
+weak-type-correct, shardable, zero device allocation)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.shapes import SHAPES, TREE_SHAPES
+from repro.models import transformer as tfm
+from repro.sharding import rules
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=NamedSharding(mesh, spec))
+
+
+def batch_specs(cfg: ModelConfig, shape_name: str, mesh, *, with_labels: bool):
+    """ShapeDtypeStructs for one global batch of inputs."""
+    info = SHAPES[shape_name]
+    b, s = info["batch"], info["seq"]
+    bspec = rules.batch_pspec(mesh, b)
+    bax = bspec[0] if len(bspec) else None
+    out = {}
+    if cfg.family == "audio":
+        out["frames"] = _sds((b, s, cfg.frontend_dim), jnp.bfloat16, mesh, P(bax, None, None))
+        if with_labels:
+            out["labels"] = _sds((b, s), jnp.int32, mesh, P(bax, None))
+        return out
+    if cfg.family == "vlm":
+        st = s - cfg.vision_patches
+        out["tokens"] = _sds((b, st), jnp.int32, mesh, P(bax, None))
+        out["patches"] = _sds(
+            (b, cfg.vision_patches, cfg.frontend_dim), jnp.bfloat16, mesh, P(bax, None, None)
+        )
+        if with_labels:
+            out["labels"] = _sds((b, st), jnp.int32, mesh, P(bax, None))
+        return out
+    out["tokens"] = _sds((b, s), jnp.int32, mesh, P(bax, None))
+    if with_labels:
+        out["labels"] = _sds((b, s), jnp.int32, mesh, P(bax, None))
+    return out
+
+
+def params_specs(cfg: ModelConfig, mesh):
+    shapes = tfm.param_shapes(cfg)
+    shardings = rules.params_shardings(shapes, mesh)
+    return jax.tree.map(
+        lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh),
+        shapes,
+        shardings,
+    )
+
+
+def opt_state_specs(cfg: ModelConfig, mesh):
+    from repro.train.optimizer import init_opt_state
+
+    pspecs = params_specs(cfg, mesh)
+    shapes = jax.eval_shape(init_opt_state, pspecs)
+
+    def inherit(path, sds):
+        name = rules._leaf_name(path)
+        if name == "step":
+            return jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=NamedSharding(mesh, P()))
+        return jax.ShapeDtypeStruct(
+            sds.shape, sds.dtype, sharding=NamedSharding(mesh, rules.spec_for(path, sds.shape, mesh))
+        )
+
+    return jax.tree_util.tree_map_with_path(inherit, shapes)
+
+
+def cache_specs(cfg: ModelConfig, shape_name: str, mesh):
+    info = SHAPES[shape_name]
+    b, s = info["batch"], info["seq"]
+    shapes = jax.eval_shape(lambda: tfm.init_cache(cfg, b, s))
+    shard_seq = shape_name == "long_500k"
+    shardings = rules.cache_shardings(mesh, shapes, shard_seq=shard_seq)
+    return jax.tree.map(
+        lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh), shapes, shardings
+    ), (b, s)
+
+
+def decode_token_specs(cfg: ModelConfig, shape_name: str, mesh):
+    b = SHAPES[shape_name]["batch"]
+    bspec = rules.batch_pspec(mesh, b)
+    bax = bspec[0] if len(bspec) else None
+    return _sds((b, 1), jnp.int32, mesh, P(bax, None))
+
+
+# --- trees family (the paper's arch) ---------------------------------------
+
+def tree_table_specs(cfg: ModelConfig, mesh):
+    t = cfg.n_trees
+    n = 2 ** (cfg.tree_depth + 1) - 1
+    c = cfg.n_classes
+    rep = P()
+    return {
+        "feature": _sds((t, n), jnp.int32, mesh, rep),
+        "threshold_key": _sds((t, n), jnp.int32, mesh, rep),
+        "left": _sds((t, n), jnp.int32, mesh, rep),
+        "right": _sds((t, n), jnp.int32, mesh, rep),
+        "leaf_fixed": _sds((t, n, c), jnp.uint32, mesh, rep),
+    }
+
+
+def tree_input_specs(cfg: ModelConfig, shape_name: str, mesh):
+    rows = TREE_SHAPES[shape_name]["rows"]
+    axes = tuple(a for a in ("pod", "data", "model") if a in mesh.shape)
+    return _sds((rows, cfg.n_tab_features), jnp.int32, mesh, P(axes, None))

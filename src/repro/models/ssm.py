@@ -1,0 +1,198 @@
+"""Mamba2 (SSD — state-space duality) layer with chunked scan + decode step.
+
+Follows arXiv:2405.21060: per-head scalar decay A, input-dependent dt/B/C,
+causal depthwise conv on (x, B, C), gated output.  The chunked algorithm
+computes intra-chunk contributions as masked (Q x Q) matmuls (MXU-friendly)
+and carries an (H, P, N) state across chunks with an associative-scan-free
+``lax.scan`` (sequential over chunks, parallel over everything else).
+
+Decode is O(1) per token: conv ring buffer + state update
+``S <- exp(dt A) S + dt B (x)``, ``y = C . S + D x``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+from repro.sharding.ops import constrain
+
+HEADDIM = 64  # P: mamba2 default head dim
+CONV_K = 4
+
+
+def ssm_dims(d_model: int, expand: int, state: int):
+    d_inner = expand * d_model
+    n_heads = d_inner // HEADDIM
+    conv_dim = d_inner + 2 * state  # x, B, C share the conv
+    return d_inner, n_heads, conv_dim
+
+
+def ssm_params(key, d_model: int, expand: int, state: int):
+    d_inner, h, conv_dim = ssm_dims(d_model, expand, state)
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    return {
+        # [z, x, B, C, dt]
+        "w_in": dense_init(k1, (d_model, 2 * d_inner + 2 * state + h)),
+        "conv_w": dense_init(k2, (conv_dim, CONV_K)),
+        "a_log": jnp.zeros((h,), jnp.float32),  # A = -exp(a_log) in (-inf,0)
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm_gamma": jnp.zeros((d_inner,), jnp.float32),
+        "w_out": dense_init(k5, (d_inner, d_model)),
+    }
+
+
+def _split_in(params, x, d_inner, state, h):
+    zxbcdt = x @ params["w_in"].astype(x.dtype)
+    z, xs, b, c, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + state, 2 * d_inner + 2 * state], axis=-1
+    )
+    return z, xs, b, c, dt
+
+
+def _causal_conv(u, w):
+    """u: (B, S, C), w: (C, K) depthwise causal conv + silu."""
+    k = w.shape[1]
+    upad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    # windows: out[t] = sum_j u[t-K+1+j] * w[:, j]
+    out = sum(upad[:, j : j + u.shape[1], :] * w[None, None, :, j].astype(u.dtype) for j in range(k))
+    return jax.nn.silu(out)
+
+
+def ssd_forward(params, x, *, d_model: int, expand: int, state: int, chunk: int = 128,
+                return_final_state: bool = False):
+    """Full-sequence SSD.  x: (B, S, D) -> (B, S, D).  S % chunk == 0 assumed
+    (configs enforce it).  With ``return_final_state`` also returns the decode
+    cache {conv, ssm} so prefill hands off exactly to ``ssd_decode_step``."""
+    d_inner, h, conv_dim = ssm_dims(d_model, expand, state)
+    bsz, s_real, _ = x.shape
+    pad = (-s_real) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+    s = s_real + pad
+    z, xs, b, c, dt = _split_in(params, x, d_inner, state, h)
+    z = constrain(z, "batch", None, "tp")
+    conv_in = jnp.concatenate([xs, b, c], axis=-1)
+    conv_out = _causal_conv(conv_in, params["conv_w"])
+    xs, b, c = jnp.split(conv_out, [d_inner, d_inner + state], axis=-1)
+    b = constrain(b, "batch", None, None)
+    c = constrain(c, "batch", None, None)
+
+    p = HEADDIM
+    xh = constrain(xs.reshape(bsz, s, h, p), "batch", None, "tp", None)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    dt = constrain(dt, "batch", None, "tp")
+    if pad:
+        # padded steps must be state-identities: dt=0 -> decay=1, no input
+        valid = (jnp.arange(s) < s_real)[None, :, None]
+        dt = jnp.where(valid, dt, 0.0)
+    a = -jnp.exp(params["a_log"])  # (H,)
+    da = dt * a  # (B,S,H) log-decay per step, negative
+
+    nc = s // chunk
+    dac = da.reshape(bsz, nc, chunk, h)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    xc = xh.reshape(bsz, nc, chunk, h, p)
+    bc = b.reshape(bsz, nc, chunk, state)
+    cc = c.reshape(bsz, nc, chunk, state)
+
+    lcum = jnp.cumsum(dac, axis=2)  # (B,nc,Q,H) inclusive cumulative log-decay
+    ltot = lcum[:, :, -1]  # (B,nc,H)
+    bf = x.dtype  # bf16 compute for the (Q x Q) MXU work; recurrence stays f32
+
+    # --- intra-chunk: masked (Q x Q) attention-like matmul
+    # decay(q,s) = exp(lcum_q - lcum_s) for s <= q; exp in f32, product in bf16
+    dq = lcum[:, :, :, None, :] - lcum[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    dec = jnp.exp(jnp.where(mask[None, None, :, :, None], dq, -jnp.inf)).astype(bf)
+    scores = jnp.einsum("bnqs,bnts->bnqt", cc.astype(bf), bc.astype(bf))
+    w = scores[..., None] * dec * dtc[:, :, None, :, :].astype(bf)  # (B,nc,Q,Q,H)
+    w = constrain(w, "batch", None, None, None, "tp")
+    y_intra = jnp.einsum(
+        "bnqth,bnthp->bnqhp", w, xc.astype(bf), preferred_element_type=jnp.float32
+    )
+    y_intra = constrain(y_intra, "batch", None, None, "tp", None)
+
+    # --- per-chunk end-state: S_c = sum_s exp(ltot - lcum_s) dt_s B_s x_s
+    decay_to_end = jnp.exp(ltot[:, :, None, :] - lcum)  # (B,nc,Q,H)
+    sc = jnp.einsum(
+        "bnqs,bnqh,bnqhp->bnhsp",
+        bc.astype(bf),
+        (decay_to_end * dtc).astype(bf),
+        xc.astype(bf),
+        preferred_element_type=jnp.float32,
+    )  # (B,nc,H,N,P)
+    sc = constrain(sc, "batch", None, "tp", None, None)
+
+    # --- inter-chunk recurrence over nc (sequential scan, f32 carry)
+    def step(s_run, inp):
+        sc_i, ltot_i = inp  # (B,H,N,P), (B,H)
+        y_state = s_run.astype(bf)  # state entering this chunk (bf16 to HBM)
+        s_next = s_run * jnp.exp(ltot_i)[:, :, None, None] + sc_i
+        return s_next, y_state
+
+    s0 = jnp.zeros((bsz, h, state, p), jnp.float32)
+    s_final, s_in = jax.lax.scan(step, s0, (sc.swapaxes(0, 1), ltot.swapaxes(0, 1)))
+    s_in = s_in.swapaxes(0, 1)  # (B,nc,H,N,P) state at chunk entry
+
+    # --- inter-chunk output: y_q += C_q . S_entry * exp(lcum_q)
+    y_inter = jnp.einsum(
+        "bnqs,bnhsp,bnqh->bnqhp",
+        cc.astype(bf),
+        s_in,
+        jnp.exp(lcum).astype(bf),
+        preferred_element_type=jnp.float32,
+    )
+    y_inter = constrain(y_inter, "batch", None, None, "tp", None)
+
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    y = y + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["norm_gamma"])
+    out = (y @ params["w_out"].astype(x.dtype))[:, :s_real]
+    if return_final_state:
+        final_cache = {
+            "conv": conv_in[:, s_real - (CONV_K - 1) : s_real, :],
+            "ssm": s_final,
+        }
+        return out, final_cache
+    return out
+
+
+def ssm_init_cache(batch: int, d_model: int, expand: int, state: int, dtype=jnp.float32):
+    d_inner, h, conv_dim = ssm_dims(d_model, expand, state)
+    return {
+        "conv": jnp.zeros((batch, CONV_K - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, h, state, HEADDIM), jnp.float32),
+    }
+
+
+def ssd_decode_step(params, x, cache, *, d_model: int, expand: int, state: int):
+    """One-token decode.  x: (B, 1, D) -> (B, 1, D), updated cache."""
+    d_inner, h, conv_dim = ssm_dims(d_model, expand, state)
+    bsz = x.shape[0]
+    z, xs, b, c, dt = _split_in(params, x[:, 0], d_inner, state, h)
+    conv_in = jnp.concatenate([xs, b, c], axis=-1)  # (B, conv_dim)
+    hist = jnp.concatenate([cache["conv"], conv_in[:, None]], axis=1)  # (B,K,C)
+    w = params["conv_w"].astype(x.dtype)  # (C,K)
+    conv_out = jax.nn.silu(jnp.einsum("bkc,ck->bc", hist, w))
+    new_conv = hist[:, 1:]
+    xs, b, c = jnp.split(conv_out, [d_inner, d_inner + state], axis=-1)
+
+    p = HEADDIM
+    xh = xs.reshape(bsz, h, p).astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a = -jnp.exp(params["a_log"])
+    decay = jnp.exp(dt * a)  # (B,H)
+    s_new = cache["ssm"] * decay[:, :, None, None] + jnp.einsum(
+        "bn,bh,bhp->bhnp", b.astype(jnp.float32), dt, xh
+    )
+    y = jnp.einsum("bn,bhnp->bhp", c.astype(jnp.float32), s_new)
+    y = y + params["d_skip"][None, :, None] * xh
+    y = y.reshape(bsz, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["norm_gamma"])
+    out = y @ params["w_out"].astype(x.dtype)
+    return out[:, None], {"conv": new_conv, "ssm": s_new}

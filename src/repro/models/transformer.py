@@ -1,0 +1,516 @@
+"""Unified model definition for all assigned LM families.
+
+One functional model covers dense / moe / ssm / hybrid / vlm / audio:
+  * homogeneous families scan a stacked block (compile time independent of L,
+    remat per block),
+  * zamba2 hybrid runs 9 unrolled groups of (scan over 6 Mamba blocks) +
+    one shared attention+MLP block (two alternating parameter sets),
+  * vlm/audio prepend/replace inputs with stub frontend embeddings through a
+    linear projector (the assignment stubs the modality encoder),
+  * the LM loss never materializes (B, S, V) logits: cross-entropy is
+    computed in sequence chunks inside a scan (vocab up to 262k).
+
+Params are plain nested dicts; ``repro.sharding.rules`` maps leaf paths to
+PartitionSpecs for the dry-run and production launch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    COMPUTE_DTYPE,
+    AttnDims,
+    attention,
+    attn_params,
+    dense_init,
+    mlp,
+    mlp_params,
+    rms_norm,
+)
+from repro.models.moe import moe_block, moe_params
+
+
+def _attn_dims(cfg: ModelConfig) -> AttnDims:
+    return AttnDims(cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim)
+
+
+def window_schedule(cfg: ModelConfig):
+    """Per-layer sliding-window size; 0 = full attention."""
+    out = []
+    for i in range(cfg.n_layers):
+        if cfg.global_every:
+            out.append(0 if (i + 1) % cfg.global_every == 0 else cfg.sliding_window)
+        else:
+            out.append(cfg.sliding_window)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _block_init(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    if cfg.family in ("ssm", "hybrid"):
+        return {
+            "ln1": jnp.zeros((d,), jnp.float32),
+            "ssm": ssm_mod.ssm_params(ks[0], d, cfg.ssm_expand, cfg.ssm_state),
+        }
+    block = {
+        "ln1": jnp.zeros((d,), jnp.float32),
+        "ln2": jnp.zeros((d,), jnp.float32),
+        "attn": attn_params(ks[0], d, _attn_dims(cfg)),
+    }
+    if cfg.family == "moe":
+        block["moe"] = moe_params(ks[1], d, cfg.n_experts, cfg.d_ff)
+    else:
+        block["mlp"] = mlp_params(ks[1], d, cfg.d_ff)
+    return block
+
+
+def _shared_block_init(cfg: ModelConfig, key):
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    return {
+        "ln1": jnp.zeros((d,), jnp.float32),
+        "ln2": jnp.zeros((d,), jnp.float32),
+        "attn": attn_params(k1, d, _attn_dims(cfg)),
+        "mlp": mlp_params(k2, d, cfg.d_ff),
+    }
+
+
+def init_params(cfg: ModelConfig, key):
+    keys = jax.random.split(key, 8)
+    params = {}
+    if cfg.family != "audio":
+        params["embed"] = dense_init(keys[0], (cfg.vocab_size, cfg.d_model), in_axis=1)
+    if cfg.frontend != "none":
+        params["frontend_proj"] = dense_init(keys[1], (cfg.frontend_dim, cfg.d_model))
+    bkeys = jax.random.split(keys[2], cfg.n_layers)
+    params["blocks"] = jax.vmap(lambda k: _block_init(cfg, k))(bkeys)
+    if cfg.hybrid_attn_every:
+        skeys = jax.random.split(keys[3], cfg.hybrid_shared_sets)
+        params["shared"] = jax.vmap(lambda k: _shared_block_init(cfg, k))(skeys)
+    params["final_norm"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    if not cfg.tie_embeddings or cfg.family == "audio":
+        params["head"] = dense_init(keys[4], (cfg.d_model, cfg.vocab_size))
+    return params
+
+
+def param_shapes(cfg: ModelConfig):
+    """Abstract params via eval_shape (no allocation) — used by the dry-run."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+def _apply_attn_block(cfg, bp, x, positions, window, kv_cache=None, cache_pos=None,
+                      causal=True, q_chunk=512):
+    h, new_cache = attention(
+        bp["attn"],
+        rms_norm(x, bp["ln1"], cfg.norm_eps),
+        _attn_dims(cfg),
+        positions=positions,
+        causal=causal,
+        window=window,
+        rope_theta=cfg.rope_theta,
+        q_chunk=q_chunk,
+        kv_cache=kv_cache,
+        cache_pos=cache_pos,
+    )
+    x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "moe":
+        m, aux = moe_block(
+            bp["moe"],
+            rms_norm(x, bp["ln2"], cfg.norm_eps),
+            n_experts=cfg.n_experts,
+            k=cfg.experts_per_token,
+            act=cfg.act,
+            capacity_factor=cfg.moe_capacity_factor,
+        )
+    else:
+        m = mlp(bp["mlp"], rms_norm(x, bp["ln2"], cfg.norm_eps), cfg.act)
+    return x + m, new_cache, aux
+
+
+def _apply_ssm_block(cfg, bp, x):
+    h = ssm_mod.ssd_forward(
+        bp["ssm"],
+        rms_norm(x, bp["ln1"], cfg.norm_eps),
+        d_model=cfg.d_model,
+        expand=cfg.ssm_expand,
+        state=cfg.ssm_state,
+        chunk=cfg.ssm_chunk,
+    )
+    return x + h
+
+
+def _select_shared(params_shared, idx: int):
+    return jax.tree.map(lambda a: a[idx], params_shared)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / encoder / prefill-logits)
+# ---------------------------------------------------------------------------
+
+def embed_inputs(cfg: ModelConfig, params, batch):
+    """Token/frontend embedding.  Returns (x (B,S,D), label_offset)."""
+    if cfg.family == "audio":
+        x = batch["frames"].astype(COMPUTE_DTYPE) @ params["frontend_proj"].astype(COMPUTE_DTYPE)
+        return x, 0
+    tok = params["embed"][batch["tokens"]].astype(COMPUTE_DTYPE)
+    if cfg.family == "vlm":
+        patches = batch["patches"].astype(COMPUTE_DTYPE) @ params["frontend_proj"].astype(
+            COMPUTE_DTYPE
+        )
+        return jnp.concatenate([patches, tok], axis=1), cfg.vision_patches
+    return tok, 0
+
+
+def _fence(x):
+    """Block XLA from hoisting per-iteration converts of the scan carry out
+    of the loop (measured: hoisting materialized the whole (L,B,S,D) saved
+    stack in f32 — 2x activation memory on mamba2 train_4k)."""
+    return jax.lax.optimization_barrier(x)
+
+
+def backbone(cfg: ModelConfig, params, x, *, remat: bool = True):
+    """Run all blocks (no cache).  x: (B,S,D) -> (B,S,D), aux_loss."""
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    causal = not cfg.encoder_only
+
+    if cfg.family in ("ssm",):
+
+        def body(carry, bp):
+            return _apply_ssm_block(cfg, bp, _fence(carry)), None
+
+        body = jax.checkpoint(body) if remat else body
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+        return x, jnp.zeros((), jnp.float32)
+
+    if cfg.family == "hybrid":
+        every = cfg.hybrid_attn_every
+        n_groups = cfg.n_layers // every
+        blocks = jax.tree.map(
+            lambda a: a.reshape((n_groups, every) + a.shape[1:]), params["blocks"]
+        )
+
+        def body(carry, bp):
+            return _apply_ssm_block(cfg, bp, _fence(carry)), None
+
+        body = jax.checkpoint(body) if remat else body
+
+        def shared_apply(x, sp):
+            return _apply_attn_block(cfg, sp, x, positions, 0)[0]
+
+        if remat:
+            shared_apply = jax.checkpoint(shared_apply)
+        for g in range(n_groups):
+            gb = jax.tree.map(lambda a: a[g], blocks)
+            x, _ = jax.lax.scan(body, x, gb)
+            sp = _select_shared(params["shared"], g % cfg.hybrid_shared_sets)
+            x = shared_apply(x, sp)
+        return x, jnp.zeros((), jnp.float32)
+
+    # dense / moe / vlm / audio: homogeneous scan with per-layer window
+    windows = jnp.asarray(window_schedule(cfg), jnp.int32)
+
+    def body(carry, xs):
+        bp, w = xs
+        h, _, aux = _apply_attn_block(cfg, bp, _fence(carry), positions, w, causal=causal)
+        return h, aux
+
+    body = jax.checkpoint(body) if remat else body
+    x, auxs = jax.lax.scan(body, x, (params["blocks"], windows))
+    return x, auxs.sum()
+
+
+def head_weights(cfg: ModelConfig, params):
+    if "head" in params:
+        return params["head"]
+    return params["embed"].T
+
+
+def chunked_cross_entropy(cfg, params, x, labels, *, chunk: int = 512, label_offset: int = 0):
+    """Mean CE over positions without materializing (B, S, V) logits."""
+    if label_offset:
+        x = x[:, label_offset:]
+    b, s, d = x.shape
+    w = head_weights(cfg, params).astype(COMPUTE_DTYPE)
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    nc = x.shape[1] // chunk
+    xc = x.reshape(b, nc, chunk, d).swapaxes(0, 1)
+    lc = labels.reshape(b, nc, chunk).swapaxes(0, 1)
+
+    from repro.sharding.ops import constrain
+
+    def one(carry, xs):
+        xi, li = xs
+        logits = constrain((xi @ w).astype(jnp.float32), "batch", None, "tp")
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, jnp.maximum(li, 0)[..., None], axis=-1)[..., 0]
+        valid = li >= 0
+        loss = jnp.where(valid, logz - gold, 0.0)
+        return (carry[0] + loss.sum(), carry[1] + valid.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(jax.checkpoint(one), (jnp.zeros(()), jnp.zeros((), jnp.int32)), (xc, lc))
+    return tot / jnp.maximum(cnt, 1)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, *, aux_weight: float = 0.01):
+    x, label_offset = embed_inputs(cfg, params, batch)
+    x, aux = backbone(cfg, params, x)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    ce = chunked_cross_entropy(cfg, params, x, batch["labels"], label_offset=label_offset)
+    return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+
+def forward_logits(cfg: ModelConfig, params, batch):
+    """Full logits (smoke tests / small models only)."""
+    x, label_offset = embed_inputs(cfg, params, batch)
+    x, _ = backbone(cfg, params, x, remat=False)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return (x @ head_weights(cfg, params).astype(x.dtype)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=COMPUTE_DTYPE):
+    dims = _attn_dims(cfg)
+    if cfg.family == "ssm":
+        per = ssm_mod.ssm_init_cache(batch, cfg.d_model, cfg.ssm_expand, cfg.ssm_state, dtype)
+        return {
+            "ssm": jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape).copy(), per
+            ),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    if cfg.family == "hybrid":
+        per = ssm_mod.ssm_init_cache(batch, cfg.d_model, cfg.ssm_expand, cfg.ssm_state, dtype)
+        n_groups = cfg.n_layers // cfg.hybrid_attn_every
+        return {
+            "ssm": jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape).copy(), per
+            ),
+            "k": jnp.zeros((n_groups, batch, max_seq, dims.n_kv_heads, dims.head_dim), dtype),
+            "v": jnp.zeros((n_groups, batch, max_seq, dims.n_kv_heads, dims.head_dim), dtype),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, max_seq, dims.n_kv_heads, dims.head_dim), dtype),
+        "v": jnp.zeros((cfg.n_layers, batch, max_seq, dims.n_kv_heads, dims.head_dim), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens):
+    """One decode step.  tokens: (B, 1) -> (last-token logits (B, V), cache)."""
+    pos = cache["pos"]
+    b = tokens.shape[0]
+    x = params["embed"][tokens].astype(COMPUTE_DTYPE)
+    positions = jnp.broadcast_to(pos[None, None], (b, 1))
+
+    if cfg.family == "ssm":
+
+        def body(x, xs):
+            bp, layer_cache = xs
+            h, new_c = ssm_mod.ssd_decode_step(
+                bp["ssm"],
+                rms_norm(x, bp["ln1"], cfg.norm_eps),
+                layer_cache,
+                d_model=cfg.d_model,
+                expand=cfg.ssm_expand,
+                state=cfg.ssm_state,
+            )
+            return x + h, new_c
+
+        x, new_ssm = jax.lax.scan(body, x, (params["blocks"], cache["ssm"]))
+        new_cache = {"ssm": new_ssm, "pos": pos + 1}
+    elif cfg.family == "hybrid":
+        every = cfg.hybrid_attn_every
+        n_groups = cfg.n_layers // every
+        blocks = jax.tree.map(
+            lambda a: a.reshape((n_groups, every) + a.shape[1:]), params["blocks"]
+        )
+        ssm_cache = jax.tree.map(
+            lambda a: a.reshape((n_groups, every) + a.shape[1:]), cache["ssm"]
+        )
+
+        def body(x, xs):
+            bp, layer_cache = xs
+            h, new_c = ssm_mod.ssd_decode_step(
+                bp["ssm"],
+                rms_norm(x, bp["ln1"], cfg.norm_eps),
+                layer_cache,
+                d_model=cfg.d_model,
+                expand=cfg.ssm_expand,
+                state=cfg.ssm_state,
+            )
+            return x + h, new_c
+
+        new_ssm, new_k, new_v = [], [], []
+        for g in range(n_groups):
+            gb = jax.tree.map(lambda a: a[g], blocks)
+            gc = jax.tree.map(lambda a: a[g], ssm_cache)
+            x, nc = jax.lax.scan(body, x, (gb, gc))
+            new_ssm.append(nc)
+            sp = _select_shared(params["shared"], g % cfg.hybrid_shared_sets)
+            x, akv, _ = _apply_attn_block(
+                cfg, sp, x, positions, 0,
+                kv_cache={"k": cache["k"][g], "v": cache["v"][g]}, cache_pos=pos,
+            )
+            new_k.append(akv["k"])
+            new_v.append(akv["v"])
+        new_cache = {
+            "ssm": jax.tree.map(
+                lambda *xs: jnp.stack(xs).reshape((cfg.n_layers,) + xs[0].shape[1:]), *new_ssm
+            ),
+            "k": jnp.stack(new_k),
+            "v": jnp.stack(new_v),
+            "pos": pos + 1,
+        }
+    else:
+        windows = jnp.asarray(window_schedule(cfg), jnp.int32)
+
+        # carry the whole cache and update layer slices in place — scanning
+        # the cache as xs/ys double-buffers the full (L,B,S,K,Dh) tensors
+        # (gemma3 decode_32k: +8.4 GB/device of temp)
+        def body(carry, xs):
+            x, ck_all, cv_all = carry
+            bp, w, l = xs
+            layer_cache = {
+                "k": jax.lax.dynamic_index_in_dim(ck_all, l, 0, keepdims=False),
+                "v": jax.lax.dynamic_index_in_dim(cv_all, l, 0, keepdims=False),
+            }
+            h, akv, _ = _apply_attn_block(
+                cfg, bp, x, positions, w, kv_cache=layer_cache, cache_pos=pos
+            )
+            ck_all = jax.lax.dynamic_update_index_in_dim(ck_all, akv["k"], l, 0)
+            cv_all = jax.lax.dynamic_update_index_in_dim(cv_all, akv["v"], l, 0)
+            return (h, ck_all, cv_all), None
+
+        (x, nk, nv), _ = jax.lax.scan(
+            body,
+            (x, cache["k"], cache["v"]),
+            (params["blocks"], windows, jnp.arange(cfg.n_layers)),
+        )
+        new_cache = {"k": nk, "v": nv, "pos": pos + 1}
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, 0] @ head_weights(cfg, params).astype(x.dtype)).astype(jnp.float32)
+    return logits, new_cache
+
+
+def _ssm_block_prefill(cfg, bp, x):
+    h, state = ssm_mod.ssd_forward(
+        bp["ssm"],
+        rms_norm(x, bp["ln1"], cfg.norm_eps),
+        d_model=cfg.d_model,
+        expand=cfg.ssm_expand,
+        state=cfg.ssm_state,
+        chunk=cfg.ssm_chunk,
+        return_final_state=True,
+    )
+    return x + h, state
+
+
+def prefill(cfg: ModelConfig, params, batch, max_seq: Optional[int] = None):
+    """Prefill: forward over the prompt, return (last-token logits, cache).
+
+    Attention families: the per-layer K/V computed during the forward pass
+    become the cache (padded to ``max_seq``).  SSM/hybrid: the chunked SSD
+    scan returns the final (conv, state) pair per layer, handing off exactly
+    to ``ssd_decode_step``.
+    """
+    x, label_offset = embed_inputs(cfg, params, batch)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    max_seq = max_seq or s
+    windows = jnp.asarray(window_schedule(cfg), jnp.int32)
+    dims = _attn_dims(cfg)
+
+    def pad_cache(kv):
+        if max_seq == s:
+            return kv
+        return jnp.pad(kv, ((0, 0), (0, max_seq - s), (0, 0), (0, 0)))
+
+    if cfg.family == "ssm":
+
+        def body(x, bp):
+            x, state = _ssm_block_prefill(cfg, bp, _fence(x))
+            return x, state
+
+        x, states = jax.lax.scan(jax.checkpoint(body), x, params["blocks"])
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = (x[:, -1] @ head_weights(cfg, params).astype(x.dtype)).astype(jnp.float32)
+        return logits, {"ssm": states, "pos": jnp.full((), s, jnp.int32)}
+
+    if cfg.family == "hybrid":
+        every = cfg.hybrid_attn_every
+        n_groups = cfg.n_layers // every
+        blocks = jax.tree.map(
+            lambda a: a.reshape((n_groups, every) + a.shape[1:]), params["blocks"]
+        )
+
+        def body(x, bp):
+            x, state = _ssm_block_prefill(cfg, bp, _fence(x))
+            return x, state
+
+        ssm_states, ks, vs = [], [], []
+        for g in range(n_groups):
+            gb = jax.tree.map(lambda a: a[g], blocks)
+            x, states = jax.lax.scan(jax.checkpoint(body), x, gb)
+            ssm_states.append(states)
+            sp = _select_shared(params["shared"], g % cfg.hybrid_shared_sets)
+            cache0 = {
+                "k": jnp.zeros((b, max_seq, dims.n_kv_heads, dims.head_dim), COMPUTE_DTYPE),
+                "v": jnp.zeros((b, max_seq, dims.n_kv_heads, dims.head_dim), COMPUTE_DTYPE),
+            }
+            x, akv, _ = _apply_attn_block(cfg, sp, x, positions, 0, kv_cache=cache0, cache_pos=0)
+            ks.append(akv["k"])
+            vs.append(akv["v"])
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = (x[:, -1] @ head_weights(cfg, params).astype(x.dtype)).astype(jnp.float32)
+        cache = {
+            # each group's scan yields leaves (every, ...); concat -> (L, ...)
+            "ssm": jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *ssm_states),
+            "k": jnp.stack(ks),
+            "v": jnp.stack(vs),
+            "pos": jnp.full((), s, jnp.int32),
+        }
+        return logits, cache
+
+    def body(carry, xs):
+        carry = _fence(carry)
+        bp, w = xs
+        cache0 = {
+            "k": jnp.zeros((b, max_seq, dims.n_kv_heads, dims.head_dim), COMPUTE_DTYPE),
+            "v": jnp.zeros((b, max_seq, dims.n_kv_heads, dims.head_dim), COMPUTE_DTYPE),
+        }
+        h, akv, _ = _apply_attn_block(
+            cfg, bp, carry, positions, w, kv_cache=cache0, cache_pos=0,
+            causal=not cfg.encoder_only,
+        )
+        return h, (akv["k"], akv["v"])
+
+    x, (nk, nv) = jax.lax.scan(jax.checkpoint(body), x, (params["blocks"], windows))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = (x[:, -1] @ head_weights(cfg, params).astype(x.dtype)).astype(jnp.float32)
+    return logits, {"k": nk, "v": nv, "pos": jnp.full((), s, jnp.int32)}

@@ -1,0 +1,4 @@
+from repro.trees.cart import DecisionTree, TreeArrays, train_tree
+from repro.trees.forest import RandomForestClassifier
+
+__all__ = ["DecisionTree", "TreeArrays", "train_tree", "RandomForestClassifier"]

@@ -1,0 +1,58 @@
+"""Treelite-style JSON model exchange.
+
+The paper's pipeline converts sklearn/XGBoost/LightGBM models into a common
+Treelite representation before codegen (Sec. III-B).  This module provides
+the equivalent boundary for this framework: export/import a trained forest as
+a JSON document with the same information content (per-node feature,
+threshold, children, leaf distribution), so externally-trained models can be
+packed and served through the integer-only path.
+"""
+from __future__ import annotations
+
+import json
+from typing import List
+
+import numpy as np
+
+from repro.trees.cart import TreeArrays
+from repro.trees.forest import RandomForestClassifier
+
+
+def forest_to_json(forest: RandomForestClassifier) -> str:
+    doc = {
+        "model_type": "random_forest_classifier",
+        "n_classes": forest.n_classes_,
+        "n_features": forest.n_features_,
+        "trees": [
+            {
+                "feature": t.feature.tolist(),
+                "threshold": [float(x) for x in t.threshold],
+                "left": t.left.tolist(),
+                "right": t.right.tolist(),
+                "leaf_probs": t.leaf_probs.tolist(),
+                "depth": t.depth,
+            }
+            for t in forest.trees_
+        ],
+    }
+    return json.dumps(doc)
+
+
+def forest_from_json(payload: str) -> RandomForestClassifier:
+    doc = json.loads(payload)
+    assert doc["model_type"] == "random_forest_classifier"
+    forest = RandomForestClassifier(n_estimators=len(doc["trees"]))
+    forest.n_classes_ = int(doc["n_classes"])
+    forest.n_features_ = int(doc["n_features"])
+    forest.trees_ = [
+        TreeArrays(
+            feature=np.asarray(t["feature"], np.int32),
+            threshold=np.asarray(t["threshold"], np.float32),
+            left=np.asarray(t["left"], np.int32),
+            right=np.asarray(t["right"], np.int32),
+            leaf_probs=np.asarray(t["leaf_probs"], np.float64),
+            depth=int(t["depth"]),
+        )
+        for t in doc["trees"]
+    ]
+    return forest

@@ -1,0 +1,29 @@
+import numpy as np
+import pytest
+
+# NOTE: do NOT set --xla_force_host_platform_device_count here — smoke tests
+# and benches must see 1 device; only launch/dryrun.py uses 512 placeholders.
+# Tests that need a few devices spawn subprocesses (see test_distributed.py).
+
+
+@pytest.fixture(scope="session")
+def shuttle_small():
+    from repro.data.tabular import make_shuttle_like, train_test_split
+
+    X, y = make_shuttle_like(n=4000, seed=7)
+    return train_test_split(X, y, seed=7)
+
+
+@pytest.fixture(scope="session")
+def small_forest(shuttle_small):
+    from repro.trees.forest import RandomForestClassifier
+
+    Xtr, ytr, _, _ = shuttle_small
+    return RandomForestClassifier(n_estimators=9, max_depth=6, seed=1).fit(Xtr, ytr)
+
+
+@pytest.fixture(scope="session")
+def small_packed(small_forest):
+    from repro.core.packing import pack_forest
+
+    return pack_forest(small_forest)

@@ -1,0 +1,132 @@
+"""Per-architecture smoke tests (assignment requirement): reduced config of
+the same family, one forward/train step on CPU, output shapes + no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCHS, get_config, smoke_config
+from repro.models import transformer as tfm
+from repro.train import optimizer as opt
+from repro.train.step import make_train_step
+
+LM_ARCHS = [a for a in ARCHS if a != "intreeger-rf"]
+
+
+def _batch(cfg, b=2, s=32, seed=0):
+    rng = np.random.default_rng(seed)
+    out = {}
+    if cfg.family == "audio":
+        out["frames"] = jnp.asarray(rng.normal(size=(b, s, cfg.frontend_dim)), jnp.float32)
+        out["labels"] = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)))
+    elif cfg.family == "vlm":
+        st = s - cfg.vision_patches
+        out["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, st)))
+        out["patches"] = jnp.asarray(
+            rng.normal(size=(b, cfg.vision_patches, cfg.frontend_dim)), jnp.float32
+        )
+        out["labels"] = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, st)))
+    else:
+        out["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)))
+        out["labels"] = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)))
+    return out
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_forward_shapes_and_finite(arch):
+    cfg = smoke_config(arch)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits = tfm.forward_logits(cfg, params, batch)
+    b = batch.get("tokens", batch.get("frames")).shape[0]
+    assert logits.shape[0] == b
+    assert logits.shape[-1] == cfg.vocab_size
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_one_train_step(arch):
+    cfg = smoke_config(arch)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    ostate = opt.init_opt_state(params)
+    step = jax.jit(make_train_step(cfg, opt.AdamWConfig(lr=1e-3, warmup_steps=1)))
+    batch = _batch(cfg)
+    params2, ostate2, metrics = step(params, ostate, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert float(metrics["loss"]) < 2 * np.log(cfg.vocab_size) + 1
+    # params actually moved
+    moved = jax.tree.reduce(
+        lambda acc, pair: acc or pair,
+        jax.tree.map(lambda a, b: bool(jnp.any(a != b)), params, params2),
+    )
+    assert moved
+
+
+def test_intreeger_rf_smoke():
+    """The paper's own arch: reduced forest end-to-end on CPU."""
+    from repro.core.packing import pack_forest
+    from repro.core.ensemble import predict_integer, predict_float
+    from repro.data.tabular import make_shuttle_like
+    from repro.trees.forest import RandomForestClassifier
+
+    cfg = smoke_config("intreeger-rf")
+    X, y = make_shuttle_like(n=1500, n_classes=cfg.n_classes, n_features=cfg.n_tab_features, seed=0)
+    rf = RandomForestClassifier(n_estimators=cfg.n_trees, max_depth=cfg.tree_depth, seed=0).fit(X, y)
+    packed = pack_forest(rf)
+    acc, predi = predict_integer(packed, X[:256])
+    _, predf = predict_float(packed, X[:256])
+    assert acc.shape == (256, cfg.n_classes)
+    assert acc.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(predi), np.asarray(predf))
+
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "gemma3-27b", "mamba2-370m",
+                                  "zamba2-2.7b", "olmoe-1b-7b", "llava-next-34b"])
+def test_prefill_decode_consistency(arch):
+    """Decode with cache matches the full forward (bf16 tolerance)."""
+    cfg = smoke_config(arch)
+    params = tfm.init_params(cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(1)
+    b, s = 2, 32
+    if cfg.family == "vlm":
+        st_ = s - cfg.vision_patches
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, st_)))
+        patches = jnp.asarray(rng.normal(size=(b, cfg.vision_patches, cfg.frontend_dim)), jnp.float32)
+        full = tfm.forward_logits(cfg, params, {"tokens": toks, "patches": patches})
+        _, cache = tfm.prefill(cfg, params, {"tokens": toks[:, :-1], "patches": patches}, max_seq=s)
+        logits_d, _ = tfm.decode_step(cfg, params, cache, toks[:, -1:])
+    else:
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)))
+        full = tfm.forward_logits(cfg, params, {"tokens": toks})
+        _, cache = tfm.prefill(cfg, params, {"tokens": toks[:, : s - 1]}, max_seq=s)
+        logits_d, _ = tfm.decode_step(cfg, params, cache, toks[:, s - 1 :])
+    ref = np.asarray(full[:, -1])
+    got = np.asarray(logits_d)
+    assert np.abs(got - ref).max() < 0.08  # bf16 accumulation-order noise
+    assert (got.argmax(-1) == ref.argmax(-1)).all()
+
+
+def test_exact_config_shapes():
+    """The registry carries the exact published configurations."""
+    c = get_config("gemma3-27b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab_size) == (
+        62, 5376, 32, 16, 21504, 262144,
+    )
+    c = get_config("qwen3-moe-30b-a3b")
+    assert (c.n_experts, c.experts_per_token, c.n_kv_heads, c.d_ff) == (128, 8, 4, 768)
+    c = get_config("granite-34b")
+    assert (c.n_layers, c.n_kv_heads) == (88, 1)
+    c = get_config("zamba2-2.7b")
+    assert (c.n_layers, c.d_model, c.ssm_state) == (54, 2560, 64)
+    c = get_config("mamba2-370m")
+    assert (c.n_layers, c.d_model, c.ssm_state) == (48, 1024, 128)
+    c = get_config("olmoe-1b-7b")
+    assert (c.n_experts, c.experts_per_token) == (64, 8)
+    c = get_config("hubert-xlarge")
+    assert c.encoder_only and c.vocab_size == 504
+    c = get_config("llava-next-34b")
+    assert (c.n_layers, c.d_model, c.n_heads) == (60, 7168, 56)
+    c = get_config("starcoder2-3b")
+    assert (c.n_kv_heads, c.d_ff) == (2, 12288)
+    c = get_config("granite-3-2b")
+    assert (c.n_layers, c.vocab_size) == (40, 49155)

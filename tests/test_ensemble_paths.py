@@ -1,0 +1,74 @@
+"""The paper's central claims, on our three inference paths:
+identical predictions (Sec. IV-B) and Fig. 2 probability-delta magnitudes."""
+import numpy as np
+import pytest
+
+from repro.core.ensemble import (
+    integer_probs,
+    make_predict_fn,
+    predict_flint,
+    predict_float,
+    predict_integer,
+)
+from repro.core.fixedpoint import fixed_to_prob_np, max_abs_error
+from repro.core.packing import pack_forest
+from repro.data.tabular import make_shuttle_like, train_test_split
+from repro.trees.forest import RandomForestClassifier
+
+
+def test_flint_identical_to_float(small_packed, shuttle_small):
+    _, _, Xte, _ = shuttle_small
+    pf, predf = predict_float(small_packed, Xte)
+    pfl, predfl = predict_flint(small_packed, Xte)
+    np.testing.assert_array_equal(np.asarray(predf), np.asarray(predfl))
+    np.testing.assert_array_equal(np.asarray(pf), np.asarray(pfl))
+
+
+def test_integer_predictions_identical(small_packed, shuttle_small, small_forest):
+    """Paper Sec. IV-B: predictions identical on every sample tested."""
+    _, _, Xte, _ = shuttle_small
+    _, predf = predict_float(small_packed, Xte)
+    acc, predi = predict_integer(small_packed, Xte)
+    assert (np.asarray(predi) == np.asarray(predf)).all()
+
+
+def test_probability_delta_magnitude(small_packed, shuttle_small, small_forest):
+    """Fig. 2: deltas ~1e-10 (1 tree) .. ~1e-8 (100 trees); here 9 trees."""
+    _, _, Xte, _ = shuttle_small
+    oracle = small_forest.predict_proba(Xte)
+    acc, _ = predict_integer(small_packed, Xte)
+    rec = fixed_to_prob_np(np.asarray(acc), small_packed.n_trees)
+    err = np.abs(rec - oracle).max()
+    assert err <= max_abs_error(small_packed.n_trees)
+    assert err < 1e-8
+
+
+@pytest.mark.parametrize("n_trees", [1, 10, 40])
+def test_paper_repro_multiple_splits(n_trees):
+    """Reduced version of the paper's 10-split repetition protocol."""
+    X, y = make_shuttle_like(n=3000, seed=11)
+    for split_seed in range(3):
+        Xtr, ytr, Xte, yte = train_test_split(X, y, seed=split_seed)
+        rf = RandomForestClassifier(n_estimators=n_trees, max_depth=5, seed=split_seed).fit(
+            Xtr, ytr
+        )
+        packed = pack_forest(rf)
+        _, predf = predict_float(packed, Xte)
+        _, predi = predict_integer(packed, Xte)
+        assert (np.asarray(predf) == np.asarray(predi)).all()
+
+
+def test_integer_probs_reconstruction(small_packed, shuttle_small):
+    _, _, Xte, _ = shuttle_small
+    acc, _ = predict_integer(small_packed, Xte[:64])
+    probs = np.asarray(integer_probs(small_packed, acc))
+    assert probs.shape == (64, small_packed.n_classes)
+    np.testing.assert_allclose(probs.sum(axis=1), 1.0, atol=1e-4)
+
+
+def test_make_predict_fn_jit_paths(small_packed, shuttle_small):
+    _, _, Xte, _ = shuttle_small
+    fns = {m: make_predict_fn(small_packed, m) for m in ("float", "flint", "integer")}
+    outs = {m: np.asarray(fn(Xte[:128])[1]) for m, fn in fns.items()}
+    np.testing.assert_array_equal(outs["float"], outs["flint"])
+    np.testing.assert_array_equal(outs["float"], outs["integer"])

@@ -1,0 +1,67 @@
+"""Fixed-point probability conversion: paper Sec. III-A properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.fixedpoint import (
+    fixed_to_prob_np,
+    max_abs_error,
+    prob_to_fixed_np,
+    scale_for,
+)
+
+
+@given(st.integers(min_value=1, max_value=300))
+def test_scale_overflow_free(n):
+    """n values each < scale sum to < 2**32 — the paper's overflow argument."""
+    assert n * scale_for(n) <= 2**32 - 1
+
+
+@given(
+    st.integers(min_value=1, max_value=256),
+    st.lists(st.floats(min_value=0.0, max_value=1.0, width=32), min_size=1, max_size=256),
+)
+@settings(max_examples=200, deadline=None)
+def test_accumulation_error_bound(n, probs):
+    """|reconstructed mean - exact mean| <= bound for any <=n-tree ensemble."""
+    probs = np.asarray(probs[:n], np.float64)
+    n_eff = len(probs)
+    fx = prob_to_fixed_np(probs, n_eff)
+    acc = np.sum(fx, dtype=np.uint64)
+    assert acc <= 2**32 - 1  # never overflows uint32 accumulation
+    rec = fixed_to_prob_np(np.uint32(acc), n_eff)
+    exact = probs.mean()
+    assert abs(rec - exact) <= max_abs_error(n_eff)
+
+
+def test_paper_example():
+    """Paper Sec. III-A worked example: p=0.75/0.25, 10 trees, scale 2^32/10.
+
+    The paper's exact constants (322122547 / 107374182) assume scale
+    2**32/10; ours uses floor((2**32-1)/10) for the documented overflow
+    guard, so values differ by at most 1 ulp of the scale."""
+    fx = prob_to_fixed_np(np.array([0.75, 0.25]), 10)
+    assert abs(int(fx[0]) - 322122547) <= 1
+    assert abs(int(fx[1]) - 107374182) <= 1
+
+
+def test_precision_vs_float32_cutoff():
+    """Paper: fixed point beats float32 precision iff n <= 256."""
+    for n in (1, 100, 256):
+        assert n / 2**32 <= 1 / 2**24 or n > 256
+    assert 257 / 2**32 > 1 / 2**24
+
+
+@given(st.integers(min_value=1, max_value=128))
+@settings(max_examples=50)
+def test_figure2_magnitude(n):
+    """Probability deltas stay in the paper's Fig. 2 magnitude regime."""
+    rng = np.random.default_rng(n)
+    probs = rng.dirichlet(np.ones(4), size=n)  # (n, 4) rows sum to 1
+    fx = prob_to_fixed_np(probs, n)
+    acc = fx.sum(axis=0, dtype=np.uint64)
+    rec = fixed_to_prob_np(acc.astype(np.uint32), n)
+    exact = probs.mean(axis=0)
+    err = np.abs(rec - exact).max()
+    assert err < 1e-7  # paper reports ~1e-10 (1 tree) to ~1e-8 (100 trees)

@@ -1,0 +1,68 @@
+"""FlInt key transform: order preservation (paper Sec. II-D / IV-C)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.flint import (
+    float_to_key,
+    float_to_key_np,
+    key_to_float,
+    key_to_float_np,
+)
+
+finite_f32 = st.floats(
+    width=32, allow_nan=False, allow_infinity=False, allow_subnormal=True
+)
+
+
+@given(finite_f32, finite_f32)
+@settings(max_examples=300)
+def test_order_preserving(a, b):
+    ka, kb = float_to_key_np(np.float32(a)), float_to_key_np(np.float32(b))
+    if np.float32(a) < np.float32(b):
+        assert ka < kb
+    elif np.float32(a) > np.float32(b):
+        assert ka > kb
+    else:
+        assert ka == kb  # includes -0.0 == +0.0
+
+
+@given(finite_f32)
+@settings(max_examples=300)
+def test_roundtrip(a):
+    a32 = np.float32(a)
+    back = key_to_float_np(float_to_key_np(a32))
+    # -0.0 maps through key 0 to +0.0; equality still holds
+    assert back == a32
+
+
+@given(st.floats(min_value=0.0, width=32, allow_nan=False, allow_infinity=False))
+@settings(max_examples=200)
+def test_nonnegative_keys_are_raw_bits(a):
+    """For f >= 0 the key IS the IEEE-754 bit pattern — exactly the immediates
+    the paper shows in Listing 2 (e.g. 87.5 -> 0x42af0000)."""
+    a32 = np.float32(a)
+    assert float_to_key_np(a32) == a32.view(np.int32)
+
+
+def test_paper_listing2_value():
+    assert int(float_to_key_np(np.float32(87.5))) == 0x42AF0000
+
+
+def test_jax_matches_numpy():
+    rng = np.random.default_rng(0)
+    x = rng.normal(scale=100, size=4096).astype(np.float32)
+    np.testing.assert_array_equal(np.asarray(float_to_key(x)), float_to_key_np(x))
+    np.testing.assert_array_equal(
+        np.asarray(key_to_float(float_to_key(x))), key_to_float_np(float_to_key_np(x))
+    )
+
+
+def test_vector_order_random():
+    rng = np.random.default_rng(1)
+    x = rng.normal(scale=1e3, size=100_000).astype(np.float32)
+    k = float_to_key_np(x)
+    order_f = np.argsort(x, kind="stable")
+    order_k = np.argsort(k, kind="stable")
+    np.testing.assert_array_equal(x[order_f], x[order_k])

@@ -1,0 +1,57 @@
+"""GBT substrate + Treelite-style JSON exchange."""
+import numpy as np
+import pytest
+
+from repro.core.packing import pack_forest
+from repro.core.ensemble import predict_integer
+from repro.data.tabular import make_shuttle_like, train_test_split
+from repro.trees.gbt import GradientBoostedClassifier, pack_gbt, predict_gbt_integer
+from repro.trees.io import forest_from_json, forest_to_json
+from repro.trees.forest import RandomForestClassifier
+
+
+@pytest.fixture(scope="module")
+def data():
+    X, y = make_shuttle_like(n=6000, n_classes=4, seed=5)
+    return train_test_split(X, y, seed=5)
+
+
+def test_gbt_learns(data):
+    Xtr, ytr, Xte, yte = data
+    gbt = GradientBoostedClassifier(n_estimators=15, max_depth=4, seed=0).fit(Xtr, ytr)
+    acc = (gbt.predict(Xte) == yte).mean()
+    prior = max(np.bincount(yte)) / len(yte)
+    assert acc > max(prior + 0.05, 0.85), acc
+
+
+def test_gbt_integer_margins_match_float(data):
+    """Signed fixed-point margin accumulation (the paper's Sec. III-A math
+    with a margin bound) gives identical argmax to the float path."""
+    Xtr, ytr, Xte, yte = data
+    gbt = GradientBoostedClassifier(n_estimators=12, max_depth=3, seed=1).fit(Xtr, ytr)
+    packed = pack_gbt(gbt)
+    pred_f = gbt.predict(Xte[:800])
+    pred_i = predict_gbt_integer(packed, Xte[:800])
+    agree = (pred_f == pred_i).mean()
+    # margins can tie within quantization; require near-total agreement
+    assert agree >= 0.999, agree
+
+
+def test_gbt_fixed_point_never_overflows(data):
+    Xtr, ytr, Xte, _ = data
+    gbt = GradientBoostedClassifier(n_estimators=25, max_depth=4, seed=2).fit(Xtr, ytr)
+    packed = pack_gbt(gbt)
+    predict_gbt_integer(packed, Xte[:500])  # internal overflow assert
+
+
+def test_forest_json_roundtrip(data):
+    Xtr, ytr, Xte, _ = data
+    rf = RandomForestClassifier(n_estimators=6, max_depth=5, seed=0).fit(Xtr, ytr)
+    restored = forest_from_json(forest_to_json(rf))
+    np.testing.assert_array_equal(rf.predict(Xte[:500]), restored.predict(Xte[:500]))
+    # imported models flow through the integer pipeline unchanged
+    p1 = pack_forest(rf)
+    p2 = pack_forest(restored)
+    _, pred1 = predict_integer(p1, Xte[:300])
+    _, pred2 = predict_integer(p2, Xte[:300])
+    np.testing.assert_array_equal(np.asarray(pred1), np.asarray(pred2))

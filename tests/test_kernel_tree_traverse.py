@@ -1,0 +1,87 @@
+"""Pallas tree-traversal kernel vs the pure-jnp oracle: shape/dtype sweeps,
+both gather strategies, padding paths — bit-identical uint32 scores."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.flint import float_to_key
+from repro.core.packing import pack_forest
+from repro.kernels.ops import packed_predict_integer, pick_blocks, tree_predict_integer
+from repro.kernels.ref import tree_predict_integer_ref
+from repro.trees.forest import RandomForestClassifier
+
+
+def _forest(n_trees, depth, n_features, n_classes, seed=0, n=1500):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, n_features)).astype(np.float32)
+    y = rng.integers(0, n_classes, n)
+    # inject signal so trees are non-trivial
+    y = np.where(X[:, 0] > 0.5, (y + 1) % n_classes, y)
+    rf = RandomForestClassifier(n_estimators=n_trees, max_depth=depth, seed=seed).fit(X, y)
+    return pack_forest(rf), X
+
+
+def _args(packed):
+    return (
+        jnp.asarray(packed.feature),
+        jnp.asarray(packed.threshold_key),
+        jnp.asarray(packed.left),
+        jnp.asarray(packed.right),
+        jnp.asarray(packed.leaf_fixed),
+    )
+
+
+@pytest.mark.parametrize("impl", ["gather", "onehot"])
+@pytest.mark.parametrize(
+    "n_trees,depth,n_features,n_classes",
+    [(3, 3, 4, 2), (7, 5, 7, 7), (12, 6, 11, 3), (5, 4, 87, 2)],
+)
+def test_kernel_matches_ref_sweep(impl, n_trees, depth, n_features, n_classes):
+    packed, X = _forest(n_trees, depth, n_features, n_classes)
+    keys = float_to_key(jnp.asarray(X[:300]))
+    feature, tkey, left, right, leaf = _args(packed)
+    ref = tree_predict_integer_ref(keys, feature, tkey, left, right, leaf, packed.max_depth)
+    out = tree_predict_integer(
+        keys, feature, tkey, left, right, leaf,
+        depth=packed.max_depth, block_b=64, impl=impl,
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    assert out.dtype == jnp.uint32
+
+
+@given(
+    bb=st.sampled_from([16, 64, 128]),
+    bt=st.integers(min_value=1, max_value=7),
+    rows=st.integers(min_value=1, max_value=200),
+)
+@settings(max_examples=12, deadline=None)
+def test_kernel_block_shapes_property(bb, bt, rows):
+    """Any (block_b, block_t, n_rows) combination is bit-identical to ref."""
+    packed, X = _forest(7, 4, 5, 3, seed=2)
+    keys = float_to_key(jnp.asarray(X[:rows]))
+    feature, tkey, left, right, leaf = _args(packed)
+    ref = tree_predict_integer_ref(keys, feature, tkey, left, right, leaf, packed.max_depth)
+    out = tree_predict_integer(
+        keys, feature, tkey, left, right, leaf,
+        depth=packed.max_depth, block_b=bb, block_t=min(bt, packed.n_trees),
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_packed_entry_point(small_packed, shuttle_small):
+    from repro.core.ensemble import predict_integer
+
+    _, _, Xte, _ = shuttle_small
+    acc_ref, pred_ref = predict_integer(small_packed, Xte[:200])
+    acc_k, pred_k = packed_predict_integer(small_packed, Xte[:200], block_b=32)
+    np.testing.assert_array_equal(np.asarray(acc_k), np.asarray(acc_ref))
+    np.testing.assert_array_equal(np.asarray(pred_k), np.asarray(pred_ref))
+
+
+def test_vmem_budget_picker():
+    bb, bt = pick_blocks(b=4096, t=128, n=2047, f=87, c=8)
+    words = bb * 87 + bt * 2047 * 4 + bt * 2047 * 8 + bb * 8
+    assert words * 4 <= 8 * 1024 * 1024
+    assert bb >= 1 and bt >= 1

@@ -1,0 +1,46 @@
+"""End-to-end launcher tests: the CLI drivers run, train losses descend,
+serving agrees across implementations."""
+import numpy as np
+import pytest
+
+
+def test_train_driver_loss_descends(capsys):
+    from repro.launch.train import main
+
+    losses = main([
+        "--arch", "granite-3-2b", "--smoke", "--steps", "30",
+        "--batch", "8", "--seq", "64", "--lr", "5e-3", "--log-every", "10",
+    ])
+    assert len(losses) == 30
+    assert losses[-1] < losses[0] - 0.2, (losses[0], losses[-1])
+
+
+def test_train_driver_checkpoints(tmp_path):
+    from repro.launch.train import main
+
+    main([
+        "--arch", "mamba2-370m", "--smoke", "--steps", "12", "--batch", "4",
+        "--seq", "64", "--ckpt-dir", str(tmp_path), "--ckpt-every", "5",
+    ])
+    from repro.checkpoint.manager import CheckpointManager
+
+    assert CheckpointManager(tmp_path).latest_step() == 10
+
+
+def test_serve_driver_trees(capsys):
+    from repro.launch.serve import main
+
+    main(["--trees", "--rows", "4000", "--n-trees", "8", "--depth", "5", "--reps", "1"])
+    out = capsys.readouterr().out
+    assert "agree_with_float=1.000000" in out
+    # float (self), flint, integer, pallas — all rows agree
+    assert out.count("agree_with_float=1.000000") == 4
+
+
+def test_serve_driver_lm(capsys):
+    from repro.launch.serve import main
+
+    main(["--arch", "granite-3-2b", "--smoke", "--batch", "2",
+          "--prompt", "16", "--tokens", "4"])
+    out = capsys.readouterr().out
+    assert "generated (2, 4) tokens" in out
