@@ -1,0 +1,19 @@
+# One-step entry points for the repo's standard workflows.
+
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: test bench serve-trees serve-gateway
+
+# tier-1 verify (see ROADMAP.md)
+test:
+	$(PY) -m pytest -x -q
+
+bench:
+	$(PY) benchmarks/run.py
+
+serve-trees:
+	$(PY) -m repro.launch.serve --trees
+
+serve-gateway:
+	$(PY) -m repro.launch.serve --trees --gateway

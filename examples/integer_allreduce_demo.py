@@ -16,15 +16,17 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.launch.mesh import compat_make_mesh
+from repro.sharding.ops import compat_shard_map
 from repro.train.intreeger_allreduce import integer_psum, quantization_error_bound
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat_make_mesh((8,), ("data",))
 rng = np.random.default_rng(0)
 g = rng.normal(size=(8, 4096)).astype(np.float32)  # 8 replicas' gradients
 
-int_sum = jax.shard_map(
+int_sum = compat_shard_map(
     lambda x: integer_psum(x, "data", 8), mesh=mesh,
-    in_specs=P("data"), out_specs=P("data"), check_vma=False,
+    in_specs=P("data"), out_specs=P("data"),
 )(g)
 int_sum = np.asarray(int_sum).reshape(8, -1)[0]
 

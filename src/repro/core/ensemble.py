@@ -90,7 +90,8 @@ def _predict(arrays, x, depth: int, acc_dtype):
 
 def predict_float(packed: PackedEnsemble, X, arrays=None):
     """float32 path.  Returns (probs f32 (B,C), preds int32)."""
-    arrays = arrays or ensemble_device_arrays(packed, "float")
+    if arrays is None:
+        arrays = ensemble_device_arrays(packed, "float")
     x = jnp.asarray(X, jnp.float32)
     acc = _predict(arrays, x, packed.max_depth, jnp.float32)
     probs = acc / packed.n_trees
@@ -99,7 +100,8 @@ def predict_float(packed: PackedEnsemble, X, arrays=None):
 
 def predict_flint(packed: PackedEnsemble, X, arrays=None):
     """FlInt path: integer compares, float prob accumulation."""
-    arrays = arrays or ensemble_device_arrays(packed, "flint")
+    if arrays is None:
+        arrays = ensemble_device_arrays(packed, "flint")
     keys = float_to_key(jnp.asarray(X, jnp.float32))
     acc = _predict(arrays, keys, packed.max_depth, jnp.float32)
     probs = acc / packed.n_trees
@@ -112,7 +114,8 @@ def predict_integer(packed: PackedEnsemble, X, arrays=None):
     Returns (acc uint32 (B,C), preds int32).  ``acc`` never overflows: each
     tree contributes < scale = floor((2**32-1)/n) and there are n trees.
     """
-    arrays = arrays or ensemble_device_arrays(packed, "integer")
+    if arrays is None:
+        arrays = ensemble_device_arrays(packed, "integer")
     keys = float_to_key(jnp.asarray(X, jnp.float32))
     acc = _predict(arrays, keys, packed.max_depth, jnp.uint32)
     return acc, jnp.argmax(acc, axis=1).astype(jnp.int32)

@@ -1,13 +1,26 @@
 """Runnable serving driver.
 
-Two modes, matching the paper's end-to-end story adapted to a serving stack:
+Three modes, matching the paper's end-to-end story adapted to a serving stack:
   * ``--trees``: train an RF on a synthetic Shuttle-like dataset, convert to
     the integer-only packed form, and serve batched predictions through the
     three implementations (float / flint / integer), reporting agreement and
     latency — the InTreeger pipeline as a service.
+  * ``--trees --gateway``: the async serving gateway end-to-end.  Trains
+    several forests, registers them in a versioned ``ModelRegistry`` (one via
+    the trees/io JSON artifact boundary), then replays a simulated-client
+    workload — Poisson arrivals, mixed 1..16-row requests, a hot key pool so
+    repeated FlInt-quantized keys exercise the response cache, and a mid-run
+    hot-swap of one model to a new version.  Requests flow
+    ``Gateway.submit → QuantizedKeyCache → MicroBatcher (coalesce to
+    block-shaped batches under a latency deadline, with admission control)
+    → ModelRegistry → TreeEngine (shape-bucketed jit)``, and the run ends
+    with a per-model metrics table (throughput, p50/p95/p99 latency, batch
+    occupancy, cache hit rate) plus a bit-identity check of gateway outputs
+    against direct ``TreeEngine.predict_scores``.
   * LM mode: load a smoke config and run batched prefill+decode generation.
 
   PYTHONPATH=src python -m repro.launch.serve --trees --rows 20000
+  PYTHONPATH=src python -m repro.launch.serve --trees --gateway --gw-requests 400
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --smoke
 """
 from __future__ import annotations
@@ -55,6 +68,150 @@ def serve_trees(args):
         )
 
 
+def build_gateway_models(registry, *, rows: int = 8000, seed: int = 0):
+    """Train + register the demo model set; returns per-model row pools.
+
+    ``esa-rf`` goes through the JSON artifact boundary on purpose — that is
+    the registry's external-model load path and must stay exercised.
+    """
+    from repro.data.tabular import make_esa_like, make_shuttle_like, train_test_split
+    from repro.trees.forest import RandomForestClassifier
+    from repro.trees.io import forest_to_json
+
+    pools = {}
+    Xs, ys = make_shuttle_like(n=rows, seed=seed)
+    Xtr, ytr, Xte, _ = train_test_split(Xs, ys, seed=seed)
+    registry.register_forest(
+        "shuttle-rf", RandomForestClassifier(n_estimators=20, max_depth=6, seed=seed).fit(Xtr, ytr)
+    )
+    pools["shuttle-rf"] = Xte
+    registry.register_forest(
+        "shuttle-deep", RandomForestClassifier(n_estimators=40, max_depth=8, seed=seed + 1).fit(Xtr, ytr)
+    )
+    pools["shuttle-deep"] = Xte
+    Xe, ye = make_esa_like(n=rows, seed=seed)
+    Xetr, yetr, Xete, _ = train_test_split(Xe, ye, seed=seed)
+    rf_esa = RandomForestClassifier(n_estimators=12, max_depth=6, seed=seed + 2).fit(Xetr, yetr)
+    registry.register_json("esa-rf", forest_to_json(rf_esa))
+    pools["esa-rf"] = Xete
+    return pools, (Xtr, ytr)
+
+
+async def run_gateway_workload(gateway, pools, *, n_requests: int, rate_hz: float,
+                               hot_frac: float = 0.3, seed: int = 0,
+                               hot_swap=None, row_choices=(1, 1, 1, 1, 2, 2, 4, 8, 16)):
+    """Poisson-arrival simulated clients.  Returns (results, n_rejected).
+
+    ``rate_hz=inf`` degenerates to a burst (all requests at t=0), which
+    measures pure gateway capacity.  ``hot_swap``: optional
+    ``(request_index, fn)`` — ``fn(gateway)`` runs mid-workload to
+    re-register a model (version bump under live traffic).
+    """
+    import asyncio
+
+    from repro.serve.queue import AdmissionError
+
+    rng = np.random.default_rng(seed)
+    model_ids = list(pools)
+    # a small hot pool per model -> repeated quantized keys -> cache hits
+    hot = {m: pools[m][rng.integers(0, len(pools[m]), 24)] for m in model_ids}
+    row_choices = np.asarray(row_choices)
+    tasks, rejected = [], 0
+
+    async def one(model_id, X):
+        nonlocal rejected
+        try:
+            return model_id, X, await gateway.submit(model_id, X)
+        except AdmissionError:
+            rejected += 1
+            return None
+
+    for i in range(n_requests):
+        if hot_swap is not None and i == hot_swap[0]:
+            hot_swap[1](gateway)
+        model_id = model_ids[int(rng.integers(0, len(model_ids)))]
+        n_rows = int(rng.choice(row_choices))
+        if rng.random() < hot_frac:
+            X = hot[model_id][rng.integers(0, len(hot[model_id]), n_rows)]
+        else:
+            X = pools[model_id][rng.integers(0, len(pools[model_id]), n_rows)]
+        tasks.append(asyncio.ensure_future(one(model_id, X)))
+        if rate_hz != float("inf"):
+            await asyncio.sleep(rng.exponential(1.0 / rate_hz))
+    results = [r for r in await asyncio.gather(*tasks) if r is not None]
+    return results, rejected
+
+
+def serve_gateway(args):
+    import asyncio
+
+    from repro.serve.gateway import Gateway
+    from repro.serve.registry import ModelRegistry
+    from repro.trees.forest import RandomForestClassifier
+
+    registry = ModelRegistry()
+    t0 = time.time()
+    pools, (Xtr, ytr) = build_gateway_models(registry, rows=args.rows // 2 or 4000)
+    print(f"registered models in {time.time()-t0:.1f}s: {registry.describe()}")
+
+    gateway = Gateway(
+        registry,
+        mode=args.gw_mode,
+        max_batch_rows=args.gw_batch_rows,
+        max_delay_ms=args.gw_max_delay_ms,
+        max_queue_rows=args.gw_queue_rows,
+    )
+
+    # warm every (model, bucket) pair so compiles don't pollute latency stats
+    t0 = time.time()
+    for mid in registry.ids():
+        registry.get(mid).engine(args.gw_mode).warm(args.gw_batch_rows)
+    print(f"warmed shape buckets in {time.time()-t0:.1f}s")
+
+    def _do_swap(gw):
+        mv = gw.registry.register_forest(
+            "shuttle-rf",
+            RandomForestClassifier(n_estimators=28, max_depth=6, seed=9).fit(Xtr, ytr),
+        )
+        mv.engine(args.gw_mode).warm(args.gw_batch_rows)  # warm the new version too
+        print(f"  hot-swapped shuttle-rf -> v{mv.version} under live traffic")
+
+    swap_done = []
+
+    def swap(gw):
+        # train/warm off the event loop; the registry repoint itself is atomic
+        swap_done.append(asyncio.get_running_loop().run_in_executor(None, _do_swap, gw))
+
+    async def main():
+        t0 = time.time()
+        results, rejected = await run_gateway_workload(
+            gateway, pools, n_requests=args.gw_requests, rate_hz=args.gw_rate,
+            hot_swap=(args.gw_requests // 2, swap),
+        )
+        dt = time.time() - t0
+        for fut in swap_done:  # make sure the hot-swap has landed
+            await fut
+        print(f"\nworkload: {len(results)} requests served, {rejected} rejected, "
+              f"{dt:.2f}s wall ({len(results)/dt:.0f} req/s)")
+        print(gateway.render_table())
+        print(f"cache: {gateway.cache.stats()}")
+
+        # bit-identity: gateway outputs == direct engine on the same rows
+        ok = True
+        for mid in registry.ids():
+            X = pools[mid][:48]
+            g_scores, g_preds = await gateway.submit(mid, X)
+            d_scores, d_preds = registry.get(mid).engine(args.gw_mode).predict_scores(X)
+            ok &= bool((g_scores == d_scores).all() and (g_preds == d_preds).all())
+        print(f"gateway == direct engine (bit-identical): {ok}")
+        await gateway.close()
+        return ok
+
+    ok = asyncio.run(main())
+    if not ok:
+        raise SystemExit("gateway outputs diverged from direct engine")
+
+
 def serve_lm(args):
     from repro.configs.base import get_config, smoke_config
     from repro.data.tokens import pipeline_for
@@ -80,6 +237,14 @@ def main(argv=None):
     ap.add_argument("--reps", type=int, default=3)
     ap.add_argument("--n-trees", type=int, default=50)
     ap.add_argument("--depth", type=int, default=7)
+    ap.add_argument("--gateway", action="store_true",
+                    help="run the async dynamic-batching gateway workload")
+    ap.add_argument("--gw-requests", type=int, default=400)
+    ap.add_argument("--gw-rate", type=float, default=400.0, help="Poisson arrival rate (req/s)")
+    ap.add_argument("--gw-batch-rows", type=int, default=64)
+    ap.add_argument("--gw-max-delay-ms", type=float, default=5.0)
+    ap.add_argument("--gw-queue-rows", type=int, default=2048)
+    ap.add_argument("--gw-mode", default="integer", choices=("float", "flint", "integer"))
     ap.add_argument("--arch", default="granite-3-2b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
@@ -87,7 +252,9 @@ def main(argv=None):
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args(argv)
-    if args.trees:
+    if args.trees and args.gateway:
+        serve_gateway(args)
+    elif args.trees:
         serve_trees(args)
     else:
         serve_lm(args)

@@ -177,11 +177,24 @@ def embed_inputs(cfg: ModelConfig, params, batch):
     return tok, 0
 
 
+@jax.custom_jvp
 def _fence(x):
     """Block XLA from hoisting per-iteration converts of the scan carry out
     of the loop (measured: hoisting materialized the whole (L,B,S,D) saved
-    stack in f32 — 2x activation memory on mamba2 train_4k)."""
+    stack in f32 — 2x activation memory on mamba2 train_4k).
+
+    optimization_barrier has no differentiation rule, so we supply the
+    obvious one: it is the identity.  The tangent passes through un-fenced —
+    a fenced tangent would need a transpose rule for reverse mode, which
+    the primitive also lacks; the measured hoisting hazard was on the
+    primal carry, which stays fenced."""
     return jax.lax.optimization_barrier(x)
+
+
+@_fence.defjvp
+def _fence_jvp(primals, tangents):
+    (x,), (t,) = primals, tangents
+    return jax.lax.optimization_barrier(x), t
 
 
 def backbone(cfg: ModelConfig, params, x, *, remat: bool = True):

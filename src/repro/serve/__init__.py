@@ -1,0 +1,29 @@
+"""Serving subsystem: engines + the async dynamic-batching gateway.
+
+Request path:  client → Gateway.submit → QuantizedKeyCache (per-row probe)
+             → MicroBatcher (coalesce to block-shaped batches under a
+               latency deadline, admission-controlled) → ModelRegistry
+               (versioned, hot-swappable) → TreeEngine (shape-bucketed
+               jitted execution) → cache fill → response.
+"""
+from repro.serve.cache import QuantizedKeyCache, row_keys
+from repro.serve.engine import LMEngine, TreeEngine, bucket_rows
+from repro.serve.gateway import Gateway
+from repro.serve.metrics import MetricsRegistry, ModelMetrics
+from repro.serve.queue import AdmissionError, MicroBatcher
+from repro.serve.registry import ModelRegistry, ModelVersion
+
+__all__ = [
+    "AdmissionError",
+    "Gateway",
+    "LMEngine",
+    "MetricsRegistry",
+    "MicroBatcher",
+    "ModelMetrics",
+    "ModelRegistry",
+    "ModelVersion",
+    "QuantizedKeyCache",
+    "TreeEngine",
+    "bucket_rows",
+    "row_keys",
+]

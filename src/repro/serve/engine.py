@@ -6,6 +6,11 @@
 ``TreeEngine``: the paper's serving path — a packed integer-only ensemble
 behind a batched predict() with three implementations (float / flint /
 integer jnp, + the Pallas kernel), mirroring InTreeger's deployment story.
+It is the execution backend behind the gateway (``repro.serve.gateway``):
+incoming batches are padded up to a small set of power-of-two row buckets so
+each (model, mode, bucket) compiles exactly once, no matter how ragged the
+request stream is.  Tree traversal is row-independent, so padding rows never
+perturbs real rows — bucketed outputs are bit-identical to unbucketed ones.
 """
 from __future__ import annotations
 
@@ -47,14 +52,34 @@ class LMEngine:
         return jnp.concatenate(toks, axis=1)
 
 
+def bucket_rows(b: int, *, max_bucket: int = 4096) -> int:
+    """Padded row count for a batch of ``b`` rows: the next power of two,
+    capped at ``max_bucket``; beyond the cap, the next ``max_bucket``
+    multiple (so huge batches still see a bounded shape vocabulary)."""
+    if b <= 0:
+        raise ValueError("batch must have at least one row")
+    if b >= max_bucket:
+        return -(-b // max_bucket) * max_bucket
+    return 1 << (b - 1).bit_length()
+
+
 class TreeEngine:
+    """Packed-ensemble execution backend.
+
+    ``predict``/``predict_scores`` accept any row count; internally the batch
+    is padded to a :func:`bucket_rows` bucket so the jitted function compiles
+    once per bucket (tracked in ``compiled_buckets``).
+    """
+
     def __init__(self, packed, *, mode: str = "integer", use_kernel: bool = False,
-                 kernel_kwargs: Optional[dict] = None):
+                 kernel_kwargs: Optional[dict] = None, max_bucket: int = 4096):
         from repro.core.ensemble import make_predict_fn
         from repro.kernels.ops import packed_predict_integer
 
         self.packed = packed
         self.mode = mode
+        self.max_bucket = max_bucket
+        self.compiled_buckets: set[int] = set()
         if use_kernel:
             assert mode == "integer", "the Pallas kernel implements the integer path"
             kw = kernel_kwargs or {}
@@ -62,10 +87,34 @@ class TreeEngine:
         else:
             self._fn = make_predict_fn(packed, mode)
 
+    @property
+    def deterministic(self) -> bool:
+        """True when outputs are bit-exact integer scores (cacheable)."""
+        return self.mode in ("flint", "integer")
+
+    def warm(self, max_rows: int) -> None:
+        """Compile every power-of-two row bucket up to ``max_rows`` so the
+        first live batches don't pay jit latency."""
+        nb = 1
+        while nb <= max_rows:
+            self.predict(np.zeros((nb, self.packed.n_features), np.float32))
+            nb *= 2
+
+    def _run(self, X):
+        X = np.asarray(X, np.float32)
+        if X.ndim != 2:
+            raise ValueError(f"expected (B, F) features, got shape {X.shape}")
+        b = X.shape[0]
+        nb = bucket_rows(b, max_bucket=self.max_bucket)
+        if nb != b:
+            X = np.concatenate([X, np.zeros((nb - b, X.shape[1]), np.float32)])
+        self.compiled_buckets.add(nb)
+        scores, preds = self._fn(jnp.asarray(X))
+        return np.asarray(scores)[:b], np.asarray(preds)[:b]
+
     def predict(self, X) -> np.ndarray:
-        _, preds = self._fn(jnp.asarray(X, jnp.float32))
-        return np.asarray(preds)
+        _, preds = self._run(X)
+        return preds
 
     def predict_scores(self, X):
-        scores, preds = self._fn(jnp.asarray(X, jnp.float32))
-        return np.asarray(scores), np.asarray(preds)
+        return self._run(X)

@@ -1,0 +1,136 @@
+"""The serving gateway: cache → micro-batcher → registry → engine.
+
+``Gateway.submit(model_id, X)`` is the one client entry point.  Per row it
+first probes the :class:`QuantizedKeyCache` (exact FlInt-key match — safe
+because the flint/integer engines are bit-deterministic); rows that miss are
+coalesced by the :class:`MicroBatcher` into block-shaped batches and executed
+on the :class:`TreeEngine` of the model's *current* registry version, then
+inserted into the cache.  The response stitches cached and computed rows back
+into request order, so callers always see exactly what a direct
+``TreeEngine.predict_scores`` on their rows would return, bit for bit.
+
+Metrics (per-model latency percentiles, throughput, batch occupancy, cache
+hit rate, admission rejects) are recorded on every request and surfaced via
+``Gateway.stats()`` / ``Gateway.render_table()``.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.serve.cache import QuantizedKeyCache, row_keys
+from repro.serve.engine import bucket_rows
+from repro.serve.metrics import MetricsRegistry
+from repro.serve.queue import AdmissionError, MicroBatcher
+from repro.serve.registry import ModelRegistry
+
+
+class Gateway:
+    def __init__(self, registry: ModelRegistry, *, mode: str = "integer",
+                 use_kernel: bool = False, max_batch_rows: int = 256,
+                 max_delay_ms: float = 2.0, max_queue_rows: int = 4096,
+                 cache_rows: int = 65536):
+        self.registry = registry
+        self.mode = mode
+        self.use_kernel = use_kernel
+        self.metrics = MetricsRegistry()
+        # the cache is only sound for bit-deterministic integer outputs
+        self.cache = QuantizedKeyCache(cache_rows if mode in ("flint", "integer") else 0)
+        self.batcher = MicroBatcher(
+            self._execute,
+            max_batch_rows=max_batch_rows,
+            max_delay_ms=max_delay_ms,
+            max_queue_rows=max_queue_rows,
+            on_batch=lambda mid, rows, padded: self.metrics.model(mid).record_batch(rows, padded),
+        )
+
+    # ----------------------------------------------------------- execution
+    def _execute(self, model_id: str, X: np.ndarray):
+        """Batch executor handed to the MicroBatcher (runs in a thread)."""
+        mv = self.registry.get(model_id)  # resolve version at dispatch time
+        eng = mv.engine(self.mode, use_kernel=self.use_kernel)
+        scores, preds = eng.predict_scores(X)
+        # meta = the version that actually computed, so cache fills are keyed
+        # consistently even when a hot-swap lands between submit and dispatch
+        return scores, preds, bucket_rows(len(X), max_bucket=eng.max_bucket), mv.version
+
+    # -------------------------------------------------------------- submit
+    async def submit(self, model_id: str, X):
+        """Serve one request of 1..n rows.  Returns (scores, preds)."""
+        t0 = time.perf_counter()
+        X = np.atleast_2d(np.asarray(X, np.float32))
+        n = X.shape[0]
+        if n == 0 or X.size == 0:
+            raise ValueError("empty request")
+        mm = self.metrics.model(model_id)
+        mv = self.registry.get(model_id)
+        cacheable = self.cache.capacity_rows > 0
+
+        keys = row_keys(X) if cacheable else [None] * n
+        cached: dict[int, tuple] = {}
+        if cacheable:
+            for i, rk in enumerate(keys):
+                hit = self.cache.get(
+                    self.cache.key_for(model_id, mv.version, self.mode, rk)
+                )
+                if hit is not None:
+                    cached[i] = hit
+            mm.record_cache(len(cached), n - len(cached))
+
+        miss_idx = [i for i in range(n) if i not in cached]
+        if miss_idx:
+            try:
+                m_scores, m_preds, served_version = await self.batcher.submit(
+                    model_id, X[miss_idx]
+                )
+                if cached and served_version != mv.version:
+                    # a hot-swap landed between the cache probe and dispatch:
+                    # the hits are from the old version.  Recompute the whole
+                    # request in ONE batcher call — a single execute runs on a
+                    # single version, so the response cannot mix versions.
+                    cached = {}
+                    miss_idx = list(range(n))
+                    m_scores, m_preds, served_version = await self.batcher.submit(
+                        model_id, X
+                    )
+            except AdmissionError:
+                mm.rejected += 1
+                raise
+            if cacheable:
+                for j, i in enumerate(miss_idx):
+                    self.cache.put(
+                        self.cache.key_for(model_id, served_version, self.mode, keys[i]),
+                        m_scores[j], m_preds[j],
+                    )
+        else:
+            m_scores = m_preds = None
+
+        # shape/dtype from the results themselves: after a mid-request
+        # hot-swap the serving version's class count may differ from mv's
+        proto = m_scores[0] if m_scores is not None else next(iter(cached.values()))[0]
+        scores = np.empty((n, proto.shape[-1]), proto.dtype)
+        preds = np.empty(n, np.int32)
+        for i, (s_row, p) in cached.items():
+            scores[i] = s_row
+            preds[i] = p
+        for j, i in enumerate(miss_idx):
+            scores[i] = m_scores[j]
+            preds[i] = m_preds[j]
+
+        mm.record_request(n, (time.perf_counter() - t0) * 1e3)
+        return scores, preds
+
+    # ------------------------------------------------------------- control
+    async def close(self) -> None:
+        await self.batcher.close()
+
+    def stats(self) -> dict:
+        return {
+            "models": self.registry.describe(),
+            "per_model": self.metrics.stats(),
+            "cache": self.cache.stats(),
+        }
+
+    def render_table(self) -> str:
+        return self.metrics.render_table()

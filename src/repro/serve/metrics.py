@@ -1,0 +1,99 @@
+"""Per-model serving metrics: throughput, latency percentiles, batch
+occupancy, cache hit rate.
+
+Recorded by the gateway on every request/batch; surfaced as a plain stats
+dict (``MetricsRegistry.stats``) and a human table (``render_table``) so the
+CLI, tests, and benchmarks all read the same numbers.  Latencies are kept in
+a bounded reservoir (newest-wins) so long-running gateways don't grow
+without bound.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+_RESERVOIR = 100_000  # latency samples kept per model
+
+
+@dataclass
+class ModelMetrics:
+    requests: int = 0
+    rows: int = 0
+    rejected: int = 0
+    batches: int = 0
+    batched_rows: int = 0     # real rows sent through the engine
+    padded_rows: int = 0      # rows after bucket padding
+    cache_hits: int = 0
+    cache_misses: int = 0
+    latencies_ms: list = field(default_factory=list)
+    t_first: float = 0.0
+    t_last: float = 0.0
+
+    def record_request(self, n_rows: int, latency_ms: float) -> None:
+        now = time.perf_counter()
+        if self.requests == 0:
+            self.t_first = now
+        self.t_last = now
+        self.requests += 1
+        self.rows += n_rows
+        self.latencies_ms.append(latency_ms)
+        if len(self.latencies_ms) > _RESERVOIR:
+            del self.latencies_ms[: -_RESERVOIR // 2]
+
+    def record_batch(self, real_rows: int, padded_rows: int) -> None:
+        self.batches += 1
+        self.batched_rows += real_rows
+        self.padded_rows += padded_rows
+
+    def record_cache(self, hits: int, misses: int) -> None:
+        self.cache_hits += hits
+        self.cache_misses += misses
+
+    def stats(self) -> dict:
+        lat = np.asarray(self.latencies_ms, np.float64)
+        span = max(self.t_last - self.t_first, 1e-9)
+        probed = self.cache_hits + self.cache_misses
+        return {
+            "requests": self.requests,
+            "rows": self.rows,
+            "rejected": self.rejected,
+            # a single request gives no usable time span; report 0, not a
+            # fabricated rate
+            "rows_per_s": self.rows / span if self.requests > 1 else 0.0,
+            "p50_ms": float(np.percentile(lat, 50)) if lat.size else float("nan"),
+            "p95_ms": float(np.percentile(lat, 95)) if lat.size else float("nan"),
+            "p99_ms": float(np.percentile(lat, 99)) if lat.size else float("nan"),
+            "batches": self.batches,
+            # requests coalesced per engine dispatch; > 1 means batching won
+            "batch_occupancy": self.batched_rows / self.batches if self.batches else 0.0,
+            # real rows / padded rows: how much bucket padding cost
+            "pad_efficiency": self.batched_rows / self.padded_rows if self.padded_rows else 0.0,
+            "cache_hit_rate": self.cache_hits / probed if probed else 0.0,
+            "cache_hits": self.cache_hits,
+        }
+
+
+class MetricsRegistry:
+    def __init__(self):
+        self._models: dict[str, ModelMetrics] = {}
+
+    def model(self, model_id: str) -> ModelMetrics:
+        return self._models.setdefault(model_id, ModelMetrics())
+
+    def stats(self) -> dict:
+        return {mid: m.stats() for mid, m in sorted(self._models.items())}
+
+    def render_table(self) -> str:
+        cols = ("requests", "rows", "rejected", "rows_per_s", "p50_ms", "p95_ms",
+                "p99_ms", "batch_occupancy", "pad_efficiency", "cache_hit_rate")
+        head = f"{'model':14s} " + " ".join(f"{c:>15s}" for c in cols)
+        lines = [head, "-" * len(head)]
+        for mid, s in self.stats().items():
+            cells = []
+            for c in cols:
+                v = s[c]
+                cells.append(f"{v:15.3f}" if isinstance(v, float) else f"{v:15d}")
+            lines.append(f"{mid:14s} " + " ".join(cells))
+        return "\n".join(lines)

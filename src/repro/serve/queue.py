@@ -1,0 +1,181 @@
+"""Async request queue + micro-batcher.
+
+Turns a stream of independent single-row / small-batch submissions into the
+block-shaped batches the kernels want: per model, a worker coalesces queued
+requests until either ``max_batch_rows`` rows have accumulated or the oldest
+request has waited ``max_delay_ms`` (the latency deadline), then dispatches
+one engine call and scatters the per-row results back to each caller's
+future.  Row outputs are independent of batch composition (tree traversal is
+per-row), so coalescing is bit-transparent to callers.
+
+Admission control: each model queue admits at most ``max_queue_rows`` rows;
+beyond that ``submit`` fails fast with :class:`AdmissionError` (the
+closed-loop client counts these as rejects) instead of letting latency grow
+without bound.
+"""
+from __future__ import annotations
+
+import asyncio
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Tuple
+
+import numpy as np
+
+ExecuteFn = Callable[[str, np.ndarray], Tuple[np.ndarray, np.ndarray, int, object]]
+
+
+class AdmissionError(RuntimeError):
+    """Raised when a model's queue is over its admission bound."""
+
+
+@dataclass
+class _Pending:
+    X: np.ndarray
+    rows: int
+    t_enqueue: float
+    future: asyncio.Future = field(compare=False)
+
+
+class MicroBatcher:
+    """Per-model dynamic batcher.
+
+    ``execute(model_id, X) -> (scores, preds, padded_rows, meta)`` runs a
+    formed batch (in a thread so model workers overlap); it is supplied by
+    the gateway so the batcher stays policy-only.  ``meta`` is opaque and
+    handed back verbatim to every caller in the batch (the gateway uses it
+    to learn which model *version* actually served the batch).  Each
+    ``submit`` resolves to ``(scores, preds, meta)`` for exactly its rows.
+    """
+
+    def __init__(self, execute: ExecuteFn, *, max_batch_rows: int = 256,
+                 max_delay_ms: float = 2.0, max_queue_rows: int = 4096,
+                 on_batch: Callable[[str, int, int], None] | None = None):
+        if max_batch_rows <= 0 or max_queue_rows <= 0:
+            raise ValueError("batch and queue bounds must be positive")
+        self._execute = execute
+        self.max_batch_rows = max_batch_rows
+        self.max_delay_s = max_delay_ms / 1e3
+        self.max_queue_rows = max_queue_rows
+        self._on_batch = on_batch
+        self._queues: dict[str, asyncio.Queue] = {}
+        self._queued_rows: dict[str, int] = {}
+        self._workers: dict[str, asyncio.Task] = {}
+        self._closed = False
+
+    # ------------------------------------------------------------- submit
+    def _lane(self, model_id: str) -> asyncio.Queue:
+        # (re)spawn the lane if it has no live worker — e.g. the gateway is
+        # reused across asyncio.run() calls and the old loop tore it down
+        w = self._workers.get(model_id)
+        if w is None or w.done():
+            self._queues[model_id] = asyncio.Queue()
+            self._queued_rows[model_id] = 0
+            self._workers[model_id] = asyncio.get_running_loop().create_task(
+                self._worker(model_id)
+            )
+        return self._queues[model_id]
+
+    async def submit(self, model_id: str, X: np.ndarray):
+        """Enqueue rows; resolves to (scores, preds, meta) for those rows."""
+        if self._closed:
+            raise RuntimeError("batcher is closed")
+        X = np.atleast_2d(np.asarray(X, np.float32))
+        rows = X.shape[0]
+        lane = self._lane(model_id)
+        if self._queued_rows[model_id] + rows > self.max_queue_rows:
+            raise AdmissionError(
+                f"{model_id}: queue depth {self._queued_rows[model_id]}+{rows} "
+                f"exceeds {self.max_queue_rows} rows"
+            )
+        fut = asyncio.get_running_loop().create_future()
+        self._queued_rows[model_id] += rows
+        lane.put_nowait(_Pending(X=X, rows=rows, t_enqueue=time.perf_counter(), future=fut))
+        return await fut
+
+    # ------------------------------------------------------------- worker
+    async def _worker(self, model_id: str) -> None:
+        lane = self._queues[model_id]
+        loop = asyncio.get_running_loop()
+        carry = None  # request that would have overflowed the previous batch
+        while True:
+            first = carry if carry is not None else await lane.get()
+            carry = None
+            batch = [first]
+            rows = first.rows
+            deadline = first.t_enqueue + self.max_delay_s
+            while rows < self.max_batch_rows:
+                # greedy drain: work already queued joins the batch for free
+                # (this is what keeps occupancy high once the engine is the
+                # bottleneck — the deadline only governs *idle* waiting)
+                try:
+                    nxt = lane.get_nowait()
+                except asyncio.QueueEmpty:
+                    timeout = deadline - time.perf_counter()
+                    if timeout <= 0:
+                        break
+                    try:
+                        nxt = await asyncio.wait_for(lane.get(), timeout)
+                    except asyncio.TimeoutError:
+                        break
+                if rows + nxt.rows > self.max_batch_rows:
+                    # never exceed max_batch_rows (warmed buckets stop there);
+                    # the overflow request opens the next batch instead
+                    carry = nxt
+                    break
+                batch.append(nxt)
+                rows += nxt.rows
+            self._queued_rows[model_id] -= rows
+            try:
+                # concatenate inside the try: ragged feature widths from a
+                # misbehaving client must fail its batch, not kill the worker
+                X = np.concatenate([p.X for p in batch]) if len(batch) > 1 else batch[0].X
+                scores, preds, padded, meta = await loop.run_in_executor(
+                    None, self._execute, model_id, X
+                )
+            except asyncio.CancelledError:  # close() mid-batch: don't strand callers
+                for p in batch + ([carry] if carry is not None else []):
+                    if not p.future.done():
+                        p.future.set_exception(RuntimeError("batcher closed"))
+                raise
+            except Exception as e:  # scatter the failure to every caller
+                for p in batch:
+                    if not p.future.done():
+                        p.future.set_exception(e)
+                continue
+            if self._on_batch is not None:
+                try:
+                    self._on_batch(model_id, rows, padded)
+                except Exception:
+                    pass  # metrics callbacks must never take down the lane
+            off = 0
+            for p in batch:
+                if not p.future.done():
+                    p.future.set_result(
+                        (scores[off:off + p.rows], preds[off:off + p.rows], meta)
+                    )
+                off += p.rows
+
+    def queued_rows(self, model_id: str) -> int:
+        return self._queued_rows.get(model_id, 0)
+
+    async def close(self) -> None:
+        self._closed = True
+        for t in self._workers.values():
+            t.cancel()
+        for t in self._workers.values():
+            try:
+                await t
+            except (asyncio.CancelledError, Exception):
+                pass
+        # fail any still-queued submissions so their callers don't hang
+        for model_id, lane in self._queues.items():
+            while True:
+                try:
+                    p = lane.get_nowait()
+                except asyncio.QueueEmpty:
+                    break
+                if not p.future.done():
+                    p.future.set_exception(RuntimeError("batcher closed"))
+            self._queued_rows[model_id] = 0
+        self._workers.clear()

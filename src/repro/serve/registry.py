@@ -1,0 +1,94 @@
+"""Multi-model registry: versioned packed ensembles behind stable model ids.
+
+Models enter through either boundary the repo supports:
+  * a trained forest object (``register_forest``), or
+  * the Treelite-style JSON artifact (``register_json``), i.e. the
+    ``trees/io`` exchange format — the path externally-trained models take.
+
+Each ``register_*`` call creates a new immutable :class:`ModelVersion` and
+atomically repoints the model id at it (hot-swap).  In-flight batches formed
+against the previous version keep their reference and finish on it; new
+requests route to the new version.  Engines are built lazily per (version,
+mode) and memoized, so a registry fronts every execution mode with one
+compile set per version.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+
+from repro.core.packing import PackedEnsemble, pack_forest
+from repro.serve.engine import TreeEngine
+from repro.trees.io import forest_from_json
+
+
+@dataclass
+class ModelVersion:
+    model_id: str
+    version: int
+    packed: PackedEnsemble
+    source: str  # "forest" | "json"
+    _engines: dict = field(default_factory=dict, repr=False)
+    _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+
+    def engine(self, mode: str = "integer", *, use_kernel: bool = False) -> TreeEngine:
+        key = (mode, use_kernel)
+        with self._lock:
+            if key not in self._engines:
+                self._engines[key] = TreeEngine(
+                    self.packed, mode=mode, use_kernel=use_kernel
+                )
+            return self._engines[key]
+
+
+class ModelRegistry:
+    def __init__(self):
+        self._models: dict[str, ModelVersion] = {}
+        self._history: dict[str, int] = {}  # model_id -> latest version number
+        self._lock = threading.Lock()
+
+    # ---------------------------------------------------------- registration
+    def _install(self, model_id: str, packed: PackedEnsemble, source: str) -> ModelVersion:
+        with self._lock:
+            version = self._history.get(model_id, 0) + 1
+            mv = ModelVersion(model_id=model_id, version=version, packed=packed,
+                              source=source)
+            self._history[model_id] = version
+            self._models[model_id] = mv  # atomic repoint = hot-swap
+            return mv
+
+    def register_packed(self, model_id: str, packed: PackedEnsemble) -> ModelVersion:
+        return self._install(model_id, packed, "packed")
+
+    def register_forest(self, model_id: str, forest) -> ModelVersion:
+        return self._install(model_id, pack_forest(forest), "forest")
+
+    def register_json(self, model_id: str, payload: str) -> ModelVersion:
+        """Load from the trees/io JSON artifact boundary."""
+        return self._install(model_id, pack_forest(forest_from_json(payload)), "json")
+
+    # ---------------------------------------------------------------- lookup
+    def get(self, model_id: str) -> ModelVersion:
+        try:
+            return self._models[model_id]
+        except KeyError:
+            raise KeyError(f"unknown model id {model_id!r}; have {sorted(self._models)}")
+
+    def version(self, model_id: str) -> int:
+        return self.get(model_id).version
+
+    def ids(self) -> list:
+        return sorted(self._models)
+
+    def describe(self) -> dict:
+        return {
+            mid: {
+                "version": mv.version,
+                "source": mv.source,
+                "n_trees": mv.packed.n_trees,
+                "n_classes": mv.packed.n_classes,
+                "n_features": mv.packed.n_features,
+                "artifact_kb": mv.packed.nbytes_integer() / 1e3,
+            }
+            for mid, mv in sorted(self._models.items())
+        }

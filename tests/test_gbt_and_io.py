@@ -44,6 +44,21 @@ def test_gbt_fixed_point_never_overflows(data):
     predict_gbt_integer(packed, Xte[:500])  # internal overflow assert
 
 
+def test_forest_json_roundtrip_scores_bit_identical(data):
+    """The registry's load path: JSON round-trip must preserve the integer
+    artifact exactly — uint32 scores, not just argmax, are bit-identical."""
+    Xtr, ytr, Xte, _ = data
+    rf = RandomForestClassifier(n_estimators=7, max_depth=6, seed=3).fit(Xtr, ytr)
+    restored = forest_from_json(forest_to_json(rf))
+    p1, p2 = pack_forest(rf), pack_forest(restored)
+    np.testing.assert_array_equal(p1.threshold_key, p2.threshold_key)
+    np.testing.assert_array_equal(p1.leaf_fixed, p2.leaf_fixed)
+    s1, pr1 = predict_integer(p1, Xte[:400])
+    s2, pr2 = predict_integer(p2, Xte[:400])
+    np.testing.assert_array_equal(np.asarray(s1), np.asarray(s2))
+    np.testing.assert_array_equal(np.asarray(pr1), np.asarray(pr2))
+
+
 def test_forest_json_roundtrip(data):
     Xtr, ytr, Xte, _ = data
     rf = RandomForestClassifier(n_estimators=6, max_depth=5, seed=0).fit(Xtr, ytr)

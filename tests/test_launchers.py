@@ -37,6 +37,17 @@ def test_serve_driver_trees(capsys):
     assert out.count("agree_with_float=1.000000") == 4
 
 
+def test_serve_driver_gateway(capsys):
+    from repro.launch.serve import main
+
+    main(["--trees", "--gateway", "--rows", "3000", "--gw-requests", "60",
+          "--gw-rate", "600", "--gw-batch-rows", "16"])
+    out = capsys.readouterr().out
+    assert "gateway == direct engine (bit-identical): True" in out
+    assert "hot-swapped shuttle-rf -> v2" in out
+    assert "cache_hit_rate" in out  # metrics table rendered
+
+
 def test_serve_driver_lm(capsys):
     from repro.launch.serve import main
 
