@@ -3,11 +3,15 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test bench serve-trees serve-gateway
+.PHONY: test conformance bench serve-trees serve-gateway
 
 # tier-1 verify (see ROADMAP.md)
 test:
 	$(PY) -m pytest -x -q
+
+# cross-backend bit-identity suite (reference / pallas / native_c)
+conformance:
+	$(PY) -m pytest -q tests/test_backends.py
 
 bench:
 	$(PY) benchmarks/run.py

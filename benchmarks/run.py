@@ -318,6 +318,42 @@ def gateway_vs_naive():
         )
 
 
+def backend_matrix():
+    """Backend axis: one model served through every registered backend at
+    several batch sizes, per-backend ns/row.  ``reference`` and ``pallas``
+    are jitted JAX on the host backend (pallas runs in interpret mode on
+    CPU, so its absolute time is not meaningful — identity is the point);
+    ``native_c`` is the paper's emitted if-else C compiled -O2 into a
+    shared library and driven through ctypes.  All integer scores must be
+    bit-identical across backends (the conformance property the backend
+    layer is anchored on)."""
+    from repro.backends import have_c_toolchain
+    from repro.serve.engine import TreeEngine
+
+    data = _datasets()["shuttle"]
+    rf, packed, Xte, _ = _forest(data, 16, depth=6)
+    names = ["reference", "pallas"] + (["native_c"] if have_c_toolchain() else [])
+    if len(names) < 3:
+        emit("backend_matrix_native_c", 0, "gcc unavailable; native_c skipped")
+
+    probe = Xte[:256]
+    ref_scores = None
+    for name in names:
+        eng = TreeEngine(packed, mode="integer", backend=name)
+        scores, _ = eng.predict_scores(probe)
+        if ref_scores is None:
+            ref_scores = scores
+        else:
+            assert (scores == ref_scores).all(), f"{name} diverged from reference"
+        for batch in (64, 256, 1024):
+            X = Xte[:batch]
+            us = _time(eng.predict_scores, X, reps=3)
+            emit(
+                f"backend_{name}_b{batch}", us,
+                f"ns_per_row={us * 1e3 / batch:.1f};buckets={sorted(eng.compiled_buckets)}",
+            )
+
+
 def roofline_table():
     """§Roofline: summarize every dry-run artifact (see EXPERIMENTS.md)."""
     dd = ART / "dryrun"
@@ -338,19 +374,32 @@ def roofline_table():
     emit("roofline_cells_ok", len(ok), f"total={len(recs)}")
 
 
-def main() -> None:
-    for fn in (
-        accuracy_identity,
-        gbt_identity,
-        perf_float_flint_integer,
-        perf_native_c,
-        instruction_count_proxy,
-        memory_footprint,
-        energy_model,
-        kernel_identity,
-        gateway_vs_naive,
-        roofline_table,
-    ):
+BENCHES = (
+    accuracy_identity,
+    gbt_identity,
+    perf_float_flint_integer,
+    perf_native_c,
+    instruction_count_proxy,
+    memory_footprint,
+    energy_model,
+    kernel_identity,
+    backend_matrix,
+    gateway_vs_naive,
+    roofline_table,
+)
+
+
+def main(argv=None) -> None:
+    """Run all benches, or only the ones named on the command line
+    (e.g. ``python benchmarks/run.py backend_matrix``)."""
+    import sys
+
+    names = list(sys.argv[1:] if argv is None else argv)
+    by_name = {fn.__name__: fn for fn in BENCHES}
+    unknown = [n for n in names if n not in by_name]
+    if unknown:
+        raise SystemExit(f"unknown bench(es) {unknown}; have {sorted(by_name)}")
+    for fn in [by_name[n] for n in names] or BENCHES:
         fn()
     out = ART / "bench_results.csv"
     out.parent.mkdir(parents=True, exist_ok=True)

@@ -25,7 +25,7 @@ engines = {
     "float": TreeEngine(packed, mode="float"),
     "flint": TreeEngine(packed, mode="flint"),
     "integer": TreeEngine(packed, mode="integer"),
-    "integer+pallas": TreeEngine(packed, mode="integer", use_kernel=True),
+    "integer+pallas": TreeEngine(packed, mode="integer", backend="pallas"),
 }
 ref = None
 for name, eng in engines.items():

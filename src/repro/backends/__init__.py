@@ -1,0 +1,42 @@
+"""Pluggable execution backends for packed tree ensembles.
+
+One protocol (:class:`TreeBackend`: ``predict_scores(X) -> (scores, preds)``
+plus declared :class:`BackendCapabilities`) behind three implementations:
+
+  * ``reference`` — the jitted jnp node-table walk (all three modes),
+  * ``pallas``    — the VMEM-tiled TPU kernel (integer mode),
+  * ``native_c``  — the paper's emitted if-else C, compiled once per model
+                    into a shared library and called via ctypes.
+
+Backends register by name; the serving stack (``TreeEngine`` /
+``ModelRegistry`` / ``Gateway``) routes per-(model, mode, backend) through
+:func:`create_backend` and never special-cases an implementation.  For the
+deterministic modes (flint/integer) all backends are bit-identical — see
+``tests/test_backends.py`` / ``make conformance``.
+"""
+from repro.backends.base import (
+    BackendCapabilities,
+    BackendUnavailable,
+    TreeBackend,
+    available_backends,
+    backend_class,
+    create_backend,
+    register_backend,
+)
+from repro.backends.native_c import NativeCBackend, have_c_toolchain
+from repro.backends.pallas import PallasBackend
+from repro.backends.reference import ReferenceBackend
+
+__all__ = [
+    "BackendCapabilities",
+    "BackendUnavailable",
+    "NativeCBackend",
+    "PallasBackend",
+    "ReferenceBackend",
+    "TreeBackend",
+    "available_backends",
+    "backend_class",
+    "create_backend",
+    "have_c_toolchain",
+    "register_backend",
+]

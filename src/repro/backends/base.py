@@ -1,0 +1,122 @@
+"""The TreeBackend protocol and the name-keyed backend registry.
+
+InTreeger's central claim is that one trained ensemble yields bit-identical
+integer-only inference on any hardware.  This module makes that claim an
+*interface*: every execution strategy for a :class:`~repro.core.packing.
+PackedEnsemble` — the jnp reference walk, the Pallas VMEM-tiled kernel, the
+paper's literal emitted C — implements the same two-method surface
+
+    predict_scores(X) -> (scores, preds)
+
+and declares what it can do via :class:`BackendCapabilities`.  The serving
+stack (``repro.serve``) routes per-(model, mode, backend) purely through this
+layer; nothing above a backend may special-case how inference runs.
+
+Scores are mode-typed exactly as in ``repro.core.ensemble``: float32 average
+probabilities for ``float``/``flint``, uint32 fixed-point class sums for
+``integer``.  For the deterministic modes (flint/integer) every backend must
+be bit-identical to :class:`~repro.backends.reference.ReferenceBackend` —
+the cross-backend conformance suite (``tests/test_backends.py``, ``make
+conformance``) enforces this on randomized forests.
+"""
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass
+from typing import ClassVar, Optional
+
+from repro.core.packing import PackedEnsemble
+
+
+class BackendUnavailable(RuntimeError):
+    """The backend cannot run on this host (e.g. no C toolchain)."""
+
+
+@dataclass(frozen=True)
+class BackendCapabilities:
+    """What a backend supports and how the serving layer should drive it.
+
+    modes:               inference modes the backend implements
+                         (subset of ``repro.core.ensemble.MODES``).
+    deterministic_modes: modes whose scores are bit-exact integers —
+                         cacheable by the gateway's QuantizedKeyCache and
+                         required to match the reference backend bit-for-bit.
+    preferred_block_rows: row-blocking hint.  When set, ``TreeEngine`` uses
+                         it as the default ``max_bucket`` so padded batch
+                         shapes line up with the backend's internal tiling.
+    compiles_per_shape:  True when each padded row bucket costs one compile
+                         (jitted backends).  False for shape-oblivious
+                         backends (native C), where the engine skips
+                         bucket padding entirely.
+    """
+
+    modes: tuple
+    deterministic_modes: tuple
+    preferred_block_rows: Optional[int] = None
+    compiles_per_shape: bool = True
+
+
+class TreeBackend(abc.ABC):
+    """One execution strategy for a packed ensemble, fixed to one mode."""
+
+    name: ClassVar[str]
+    capabilities: ClassVar[BackendCapabilities]
+
+    def __init__(self, packed: PackedEnsemble, mode: str = "integer"):
+        if mode not in self.capabilities.modes:
+            raise ValueError(
+                f"backend {self.name!r} does not implement mode {mode!r}; "
+                f"supported modes: {self.capabilities.modes}"
+            )
+        self.packed = packed
+        self.mode = mode
+
+    @property
+    def deterministic(self) -> bool:
+        """True when outputs are bit-exact integer scores (cacheable)."""
+        return self.mode in self.capabilities.deterministic_modes
+
+    @abc.abstractmethod
+    def predict_scores(self, X):
+        """Float features (B, F) in -> (scores (B, C), preds (B,) int32).
+
+        ``X`` is always in the *float* domain; the backend owns its own
+        domain transform (FlInt keying for flint/integer modes).
+        """
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"<{type(self).__name__} mode={self.mode!r}>"
+
+
+# ---------------------------------------------------------------------------
+# name-keyed registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict = {}
+
+
+def register_backend(cls):
+    """Class decorator: make ``cls`` constructible via :func:`create_backend`."""
+    if not (isinstance(cls, type) and issubclass(cls, TreeBackend)):
+        raise TypeError(f"register_backend expects a TreeBackend subclass, got {cls!r}")
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def available_backends() -> list:
+    return sorted(_REGISTRY)
+
+
+def backend_class(name: str):
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown backend {name!r}; available: {available_backends()}"
+        ) from None
+
+
+def create_backend(name: str, packed: PackedEnsemble, *, mode: str = "integer",
+                   **kwargs) -> TreeBackend:
+    """Instantiate a registered backend by name for one (model, mode)."""
+    return backend_class(name)(packed, mode, **kwargs)

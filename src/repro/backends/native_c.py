@@ -1,0 +1,132 @@
+"""NativeCBackend: serve the paper's literal C deliverable.
+
+``codegen/c_emitter.emit_c`` produces InTreeger's actual artifact — a
+freestanding integer-only if-else C file.  Until now the repo could only
+benchmark it offline (``codegen/native_bench``); this backend compiles it
+*once per (model, mode)* into a shared library (`gcc -O2 -shared -fPIC`) and
+calls the batched entry point through ctypes, which makes the emitted C a
+first-class servable backend behind the same gateway as the JAX paths.
+
+Shape-oblivious: the C loop takes any row count, so ``compiles_per_shape`` is
+False and the serving layer skips bucket padding entirely.  In integer mode
+the C accumulates uint32 at the same scale and in the same tree order as the
+reference, so scores are bit-identical; in flint/float modes gcc (without
+-ffast-math) preserves the emitted float32 operation order, matching the
+XLA scan's sequential per-tree adds.
+"""
+from __future__ import annotations
+
+import ctypes
+import shutil
+import subprocess
+import tempfile
+import threading
+from pathlib import Path
+
+import numpy as np
+
+from repro.backends.base import (
+    BackendCapabilities,
+    BackendUnavailable,
+    TreeBackend,
+    register_backend,
+)
+from repro.core.flint import float_to_key_np
+from repro.core.packing import PackedEnsemble
+
+
+def have_c_toolchain(cc: str = "gcc") -> bool:
+    return shutil.which(cc) is not None
+
+
+@register_backend
+class NativeCBackend(TreeBackend):
+    name = "native_c"
+    capabilities = BackendCapabilities(
+        modes=("float", "flint", "integer"),
+        deterministic_modes=("flint", "integer"),
+        preferred_block_rows=None,
+        compiles_per_shape=False,
+    )
+
+    def __init__(self, packed: PackedEnsemble, mode: str = "integer", *,
+                 cc: str = "gcc", cflags: tuple = ("-O2",)):
+        super().__init__(packed, mode)
+        self._cc = cc
+        self._cflags = tuple(cflags)
+        self._lib = None
+        self._tmpdir = None  # owns the .so for the backend's lifetime
+        self._compile_lock = threading.Lock()
+
+    # ------------------------------------------------------------- compile
+    def _ensure_lib(self):
+        # double-checked locking: engines are shared across executor threads,
+        # and a concurrent first predict must not compile twice (the loser's
+        # tmpdir assignment would delete the winner's .so out from under it)
+        if self._lib is not None:
+            return self._lib
+        with self._compile_lock:
+            if self._lib is not None:
+                return self._lib
+            return self._build_lib()
+
+    def _build_lib(self):
+        if not have_c_toolchain(self._cc):
+            raise BackendUnavailable(
+                f"native_c backend needs a C compiler; {self._cc!r} not on PATH"
+            )
+        from repro.codegen.c_emitter import emit_batch_entry, emit_c
+
+        src = emit_c(self.packed, mode=self.mode) + emit_batch_entry(
+            self.packed, mode=self.mode
+        )
+        self._tmpdir = tempfile.TemporaryDirectory(prefix="repro_native_c_")
+        d = Path(self._tmpdir.name)
+        c_file, so_file = d / "model.c", d / "model.so"
+        c_file.write_text(src)
+        proc = subprocess.run(
+            [self._cc, *self._cflags, "-shared", "-fPIC",
+             "-o", str(so_file), str(c_file)],
+            capture_output=True,
+        )
+        if proc.returncode != 0:
+            raise BackendUnavailable(
+                f"{self._cc} failed to build the native backend:\n"
+                + proc.stderr.decode(errors="replace")[:2000]
+            )
+        lib = ctypes.CDLL(str(so_file))  # RTLD_LOCAL: symbols stay per-model
+        data_ct = ctypes.c_float if self.mode == "float" else ctypes.c_int32
+        score_ct = ctypes.c_uint32 if self.mode == "integer" else ctypes.c_float
+        lib.predict_batch.restype = None
+        lib.predict_batch.argtypes = [
+            ctypes.POINTER(data_ct),
+            ctypes.c_long,
+            ctypes.POINTER(score_ct),
+            ctypes.POINTER(ctypes.c_int32),
+        ]
+        self._score_dtype = np.uint32 if self.mode == "integer" else np.float32
+        self._lib = lib
+        return lib
+
+    # ------------------------------------------------------------- predict
+    def predict_scores(self, X):
+        lib = self._ensure_lib()
+        X = np.ascontiguousarray(np.asarray(X, np.float32))
+        if X.ndim != 2 or X.shape[1] != self.packed.n_features:
+            raise ValueError(
+                f"expected (B, {self.packed.n_features}) features, got {X.shape}"
+            )
+        if self.mode == "float":
+            data = X
+        else:
+            data = np.ascontiguousarray(float_to_key_np(X))
+        b = X.shape[0]
+        scores = np.empty((b, self.packed.n_classes), self._score_dtype)
+        preds = np.empty(b, np.int32)
+        lib.predict_batch(
+            data.ctypes.data_as(lib.predict_batch.argtypes[0]),
+            ctypes.c_long(b),
+            scores.ctypes.data_as(lib.predict_batch.argtypes[2]),
+            preds.ctypes.data_as(lib.predict_batch.argtypes[3]),
+        )
+        return scores, preds

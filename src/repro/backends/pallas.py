@@ -1,0 +1,44 @@
+"""PallasBackend: the VMEM-tiled TPU kernel behind the TreeBackend protocol.
+
+Wraps ``repro.kernels.ops.packed_predict_integer`` and owns the blocking
+decisions: the row/tree block sizes fed to the kernel (VMEM-budgeted via
+``pick_blocks``) and the ``preferred_block_rows`` hint that makes the serving
+layer pad batches to shapes aligned with the kernel's ``block_b`` tiling.
+
+The kernel implements exactly the paper's integer path (int32 FlInt compares,
+uint32 fixed-point accumulation), so ``modes == ("integer",)``; uint32
+addition is associative mod 2^32, which is why the tiled accumulation is
+bit-identical to the reference walk no matter how the grid is carved.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.backends.base import BackendCapabilities, TreeBackend, register_backend
+from repro.core.packing import PackedEnsemble
+
+_DEFAULT_BLOCK_B = 256  # the kernel wrapper's row-tile default
+
+
+@register_backend
+class PallasBackend(TreeBackend):
+    name = "pallas"
+    capabilities = BackendCapabilities(
+        modes=("integer",),
+        deterministic_modes=("integer",),
+        preferred_block_rows=_DEFAULT_BLOCK_B,
+        compiles_per_shape=True,
+    )
+
+    def __init__(self, packed: PackedEnsemble, mode: str = "integer", *,
+                 block_b: int = _DEFAULT_BLOCK_B, block_t: Optional[int] = None,
+                 impl: str = "gather", interpret: bool = True):
+        super().__init__(packed, mode)
+        self._kernel_kwargs = dict(
+            block_b=block_b, block_t=block_t, impl=impl, interpret=interpret
+        )
+
+    def predict_scores(self, X):
+        from repro.kernels.ops import packed_predict_integer
+
+        return packed_predict_integer(self.packed, X, **self._kernel_kwargs)

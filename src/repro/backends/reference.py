@@ -1,0 +1,31 @@
+"""ReferenceBackend: the pure-jnp breadth-batched node-table walk.
+
+This is the semantic oracle: one jitted predict per (model, mode), built from
+the shared mode spec in ``repro.core.ensemble``.  Every other backend's
+flint/integer output is defined as "bit-identical to this".
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.backends.base import BackendCapabilities, TreeBackend, register_backend
+from repro.core.ensemble import MODES, make_predict_fn
+from repro.core.packing import PackedEnsemble
+
+
+@register_backend
+class ReferenceBackend(TreeBackend):
+    name = "reference"
+    capabilities = BackendCapabilities(
+        modes=MODES,
+        deterministic_modes=("flint", "integer"),
+        preferred_block_rows=None,  # any padded shape is fine
+        compiles_per_shape=True,
+    )
+
+    def __init__(self, packed: PackedEnsemble, mode: str = "integer"):
+        super().__init__(packed, mode)
+        self._fn = make_predict_fn(packed, mode)
+
+    def predict_scores(self, X):
+        return self._fn(jnp.asarray(X, jnp.float32))

@@ -14,6 +14,8 @@ file needs only <stdint.h> — no libm, no FPU.
 """
 from __future__ import annotations
 
+import numpy as np
+
 from repro.core.packing import PackedEnsemble
 
 
@@ -24,31 +26,50 @@ def _c_float(v: float) -> str:
     return s + "f"
 
 
+# indentation is capped so pathologically deep trees (depth in the thousands)
+# don't blow the emitted file up with megabytes of leading spaces
+_MAX_INDENT = 64
+
+
 def _emit_node(lines, packed, t, node, indent, mode):
-    pad = "  " * indent
-    feat = int(packed.feature[t, node])
-    if feat < 0:  # leaf
-        if mode == "integer":
-            row = packed.leaf_fixed[t, node]
-            for c, v in enumerate(row):
-                if int(v):
-                    lines.append(f"{pad}result[{c}] += {int(v)}u;")
+    """Emit the if-else cascade for one tree, iteratively.
+
+    The recursive formulation nests two Python calls per tree level, so any
+    tree deeper than ~¼ of ``sys.getrecursionlimit()`` would crash codegen.
+    An explicit work stack makes emission depth-independent; items are either
+    a node to expand or a literal line (the ``} else {`` / ``}`` scaffolding),
+    pushed in reverse so they pop in source order.
+    """
+    stack = [("node", node, indent)]
+    while stack:
+        kind, payload, ind = stack.pop()
+        pad = "  " * min(ind, _MAX_INDENT)
+        if kind == "line":
+            lines.append(f"{pad}{payload}")
+            continue
+        feat = int(packed.feature[t, payload])
+        if feat < 0:  # leaf
+            if mode == "integer":
+                row = packed.leaf_fixed[t, payload]
+                for c, v in enumerate(row):
+                    if int(v):
+                        lines.append(f"{pad}result[{c}] += {int(v)}u;")
+            else:
+                row = packed.leaf_probs[t, payload]
+                for c, v in enumerate(row):
+                    if float(v):
+                        lines.append(f"{pad}result[{c}] += {_c_float(v)};")
+            continue
+        if mode in ("integer", "flint"):
+            key = int(packed.threshold_key[t, payload]) & 0xFFFFFFFF
+            cond = f"data[{feat}] <= (int32_t)0x{key:08x}"
         else:
-            row = packed.leaf_probs[t, node]
-            for c, v in enumerate(row):
-                if float(v):
-                    lines.append(f"{pad}result[{c}] += {_c_float(v)};")
-        return
-    if mode in ("integer", "flint"):
-        key = int(packed.threshold_key[t, node]) & 0xFFFFFFFF
-        cond = f"data[{feat}] <= (int32_t)0x{key:08x}"
-    else:
-        cond = f"data[{feat}] <= {_c_float(packed.threshold[t, node])}"
-    lines.append(f"{pad}if ({cond}) {{")
-    _emit_node(lines, packed, t, int(packed.left[t, node]), indent + 1, mode)
-    lines.append(f"{pad}}} else {{")
-    _emit_node(lines, packed, t, int(packed.right[t, node]), indent + 1, mode)
-    lines.append(f"{pad}}}")
+            cond = f"data[{feat}] <= {_c_float(packed.threshold[t, payload])}"
+        lines.append(f"{pad}if ({cond}) {{")
+        stack.append(("line", "}", ind))
+        stack.append(("node", int(packed.right[t, payload]), ind + 1))
+        stack.append(("line", "} else {", ind))
+        stack.append(("node", int(packed.left[t, payload]), ind + 1))
 
 
 def emit_c(packed: PackedEnsemble, mode: str = "integer") -> str:
@@ -84,8 +105,12 @@ def emit_c(packed: PackedEnsemble, mode: str = "integer") -> str:
         lines.append(f"  /* tree {tree} */")
         _emit_node(lines, packed, tree, 0, 1, mode)
     if mode in ("float", "flint"):
+        # ensemble-average by the precomputed float32 reciprocal: XLA lowers
+        # the reference path's ``acc / n`` to exactly this multiply, so the
+        # emitted C stays bit-identical to the reference backend's scores
+        rcp = np.float32(1.0) / np.float32(t)
         for i in range(c):
-            lines.append(f"  result[{i}] /= {t}.0f;")
+            lines.append(f"  result[{i}] *= {_c_float(rcp)};")
     lines.append("}")
     lines.append("")
     # argmax helper (comparisons only)
@@ -104,22 +129,60 @@ def emit_c(packed: PackedEnsemble, mode: str = "integer") -> str:
     return "\n".join(lines)
 
 
-def emit_test_harness(packed: PackedEnsemble, n_samples: int) -> str:
+def emit_test_harness(packed: PackedEnsemble, n_samples: int,
+                      mode: str = "integer") -> str:
     """A main() that reads raw feature rows from stdin and prints argmax —
-    used by tests to diff gcc-compiled output against the JAX paths."""
+    used by tests to diff gcc-compiled output against the JAX paths.
+
+    ``mode == "float"`` reads float32 rows; flint/integer read the FlInt
+    int32 keys, matching the ``predict_class`` prototype :func:`emit_c`
+    produced for that mode.
+    """
+    assert mode in ("integer", "flint", "float")
     f = packed.n_features
+    data_t = "float" if mode == "float" else "int32_t"
     return "\n".join(
         [
             "#include <stdio.h>",
             "#include <stdint.h>",
-            "int predict_class(const int32_t* data);",
+            f"int predict_class(const {data_t}* data);",
             "int main(void) {",
-            f"  static int32_t row[{f}];",
+            f"  static {data_t} row[{f}];",
             f"  for (int s = 0; s < {n_samples}; ++s) {{",
-            f"    fread(row, sizeof(int32_t), {f}, stdin);",
+            f"    fread(row, sizeof({data_t}), {f}, stdin);",
             '    printf("%d\\n", predict_class(row));',
             "  }",
             "  return 0;",
+            "}",
+            "",
+        ]
+    )
+
+
+def emit_batch_entry(packed: PackedEnsemble, mode: str = "integer") -> str:
+    """A batched entry point for shared-library serving (``NativeCBackend``).
+
+    ``predict_batch(data, n_rows, scores, preds)`` runs the single-row
+    ``predict`` over ``n_rows`` contiguous rows, filling a (n_rows, C) score
+    matrix and an argmax vector — the C-side mirror of the JAX backends'
+    ``predict_scores`` contract, callable from ctypes with any row count.
+    """
+    assert mode in ("integer", "flint", "float")
+    f, c = packed.n_features, packed.n_classes
+    data_t = "float" if mode == "float" else "int32_t"
+    acc_t = "uint32_t" if mode == "integer" else "float"
+    return "\n".join(
+        [
+            f"void predict_batch(const {data_t}* data, long n_rows,",
+            f"                   {acc_t}* scores, int32_t* preds) {{",
+            "  for (long r = 0; r < n_rows; ++r) {",
+            f"    const {data_t}* row = data + r * {f};",
+            f"    {acc_t}* out = scores + r * {c};",
+            "    predict(row, out);",
+            "    int best = 0;",
+            f"    for (int i = 1; i < {c}; ++i) if (out[i] > out[best]) best = i;",
+            "    preds[r] = best;",
+            "  }",
             "}",
             "",
         ]

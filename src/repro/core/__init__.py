@@ -4,21 +4,29 @@
 #   packing.py    — ensemble -> dense node tables (TPU analogue of codegen)
 #   ensemble.py   — float / flint / integer inference paths (pure jnp)
 from repro.core.ensemble import (
+    MODES,
+    ModeSpec,
     ensemble_device_arrays,
     integer_probs,
     make_predict_fn,
+    mode_spec,
     predict_flint,
     predict_float,
     predict_integer,
+    predict_mode,
 )
 from repro.core.fixedpoint import fixed_to_prob, max_abs_error, prob_to_fixed_np, scale_for
 from repro.core.flint import float_to_key, float_to_key_np, key_to_float, key_to_float_np
 from repro.core.packing import PackedEnsemble, pack_forest
 
 __all__ = [
+    "MODES",
+    "ModeSpec",
     "ensemble_device_arrays",
     "integer_probs",
     "make_predict_fn",
+    "mode_spec",
+    "predict_mode",
     "predict_flint",
     "predict_float",
     "predict_integer",

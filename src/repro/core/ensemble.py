@@ -13,7 +13,9 @@ Pallas VMEM-tiled version of the ``integer`` path and must match it exactly.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from functools import partial
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -26,8 +28,63 @@ from repro.core.packing import PackedEnsemble
 MODES = ("float", "flint", "integer")
 
 
+@dataclass(frozen=True)
+class ModeSpec:
+    """Everything that distinguishes one inference mode from another.
+
+    The traversal itself (:func:`_predict`) is mode-oblivious; a mode is just
+      * ``domain_transform`` — float32 features -> the threshold-compare
+        domain (identity for ``float``, FlInt int32 keys otherwise),
+      * ``acc_dtype``        — the leaf-accumulator dtype,
+      * ``finalize``         — ``(acc, n_trees) -> scores`` (ensemble-average
+        for the float-accumulating modes, identity for fixed-point),
+      * ``deterministic``    — True when outputs are bit-deterministic given
+        the row's FlInt keys (flint/integer), which is what makes gateway
+        caching and cross-backend bit-identity sound.
+    """
+
+    name: str
+    acc_dtype: Any
+    domain_transform: Callable
+    finalize: Callable
+    deterministic: bool
+
+
+_MODE_SPECS = {
+    "float": ModeSpec(
+        name="float",
+        acc_dtype=jnp.float32,
+        domain_transform=lambda x: x,
+        finalize=lambda acc, n: acc / n,
+        deterministic=False,
+    ),
+    "flint": ModeSpec(
+        name="flint",
+        acc_dtype=jnp.float32,
+        domain_transform=float_to_key,
+        finalize=lambda acc, n: acc / n,
+        deterministic=True,
+    ),
+    "integer": ModeSpec(
+        name="integer",
+        acc_dtype=jnp.uint32,
+        domain_transform=float_to_key,
+        finalize=lambda acc, n: acc,
+        deterministic=True,
+    ),
+}
+
+
+def mode_spec(mode: str) -> ModeSpec:
+    try:
+        return _MODE_SPECS[mode]
+    except KeyError:
+        raise ValueError(f"unknown mode {mode!r}; have {MODES}") from None
+
+
 def ensemble_device_arrays(packed: PackedEnsemble, mode: str) -> dict:
     """The deployment artifact for one mode, as a dict of jnp arrays."""
+    mode_spec(mode)  # validate the name
     base = dict(
         feature=jnp.asarray(packed.feature),
         left=jnp.asarray(packed.left),
@@ -39,11 +96,9 @@ def ensemble_device_arrays(packed: PackedEnsemble, mode: str) -> dict:
     elif mode == "flint":
         base["threshold"] = jnp.asarray(packed.threshold_key)
         base["leaf"] = jnp.asarray(packed.leaf_probs)
-    elif mode == "integer":
+    else:
         base["threshold"] = jnp.asarray(packed.threshold_key)
         base["leaf"] = jnp.asarray(packed.leaf_fixed)
-    else:
-        raise ValueError(f"unknown mode {mode!r}")
     return base
 
 
@@ -88,37 +143,36 @@ def _predict(arrays, x, depth: int, acc_dtype):
     return acc
 
 
+def predict_mode(packed: PackedEnsemble, X, mode: str, arrays=None):
+    """The one parametrized inference path: ``(scores, preds)`` for any mode.
+
+    ``float``/``flint`` scores are float32 ensemble-average probabilities;
+    ``integer`` scores are the raw uint32 fixed-point sums (overflow-free by
+    construction: each tree contributes < scale = floor((2**32-1)/n) and
+    there are n trees).
+    """
+    spec = mode_spec(mode)
+    if arrays is None:
+        arrays = ensemble_device_arrays(packed, mode)
+    dom = spec.domain_transform(jnp.asarray(X, jnp.float32))
+    acc = _predict(arrays, dom, packed.max_depth, spec.acc_dtype)
+    scores = spec.finalize(acc, packed.n_trees)
+    return scores, jnp.argmax(scores, axis=1).astype(jnp.int32)
+
+
 def predict_float(packed: PackedEnsemble, X, arrays=None):
     """float32 path.  Returns (probs f32 (B,C), preds int32)."""
-    if arrays is None:
-        arrays = ensemble_device_arrays(packed, "float")
-    x = jnp.asarray(X, jnp.float32)
-    acc = _predict(arrays, x, packed.max_depth, jnp.float32)
-    probs = acc / packed.n_trees
-    return probs, jnp.argmax(probs, axis=1).astype(jnp.int32)
+    return predict_mode(packed, X, "float", arrays)
 
 
 def predict_flint(packed: PackedEnsemble, X, arrays=None):
     """FlInt path: integer compares, float prob accumulation."""
-    if arrays is None:
-        arrays = ensemble_device_arrays(packed, "flint")
-    keys = float_to_key(jnp.asarray(X, jnp.float32))
-    acc = _predict(arrays, keys, packed.max_depth, jnp.float32)
-    probs = acc / packed.n_trees
-    return probs, jnp.argmax(probs, axis=1).astype(jnp.int32)
+    return predict_mode(packed, X, "flint", arrays)
 
 
 def predict_integer(packed: PackedEnsemble, X, arrays=None):
-    """InTreeger path: integer compares + uint32 fixed-point accumulation.
-
-    Returns (acc uint32 (B,C), preds int32).  ``acc`` never overflows: each
-    tree contributes < scale = floor((2**32-1)/n) and there are n trees.
-    """
-    if arrays is None:
-        arrays = ensemble_device_arrays(packed, "integer")
-    keys = float_to_key(jnp.asarray(X, jnp.float32))
-    acc = _predict(arrays, keys, packed.max_depth, jnp.uint32)
-    return acc, jnp.argmax(acc, axis=1).astype(jnp.int32)
+    """InTreeger path: integer compares + uint32 fixed-point accumulation."""
+    return predict_mode(packed, X, "integer", arrays)
 
 
 def integer_probs(packed: PackedEnsemble, acc):
@@ -128,30 +182,15 @@ def integer_probs(packed: PackedEnsemble, acc):
 
 def make_predict_fn(packed: PackedEnsemble, mode: str):
     """Close over device arrays; return a jitted X -> (scores, preds) fn."""
+    spec = mode_spec(mode)
     arrays = ensemble_device_arrays(packed, mode)
     depth = packed.max_depth
     n = packed.n_trees
 
-    if mode == "float":
-
-        def fn(x):
-            acc = _predict(arrays, jnp.asarray(x, jnp.float32), depth, jnp.float32)
-            probs = acc / n
-            return probs, jnp.argmax(probs, axis=1).astype(jnp.int32)
-
-    elif mode == "flint":
-
-        def fn(x):
-            keys = float_to_key(jnp.asarray(x, jnp.float32))
-            acc = _predict(arrays, keys, depth, jnp.float32)
-            probs = acc / n
-            return probs, jnp.argmax(probs, axis=1).astype(jnp.int32)
-
-    else:
-
-        def fn(x):
-            keys = float_to_key(jnp.asarray(x, jnp.float32))
-            acc = _predict(arrays, keys, depth, jnp.uint32)
-            return acc, jnp.argmax(acc, axis=1).astype(jnp.int32)
+    def fn(x):
+        dom = spec.domain_transform(jnp.asarray(x, jnp.float32))
+        acc = _predict(arrays, dom, depth, spec.acc_dtype)
+        scores = spec.finalize(acc, n)
+        return scores, jnp.argmax(scores, axis=1).astype(jnp.int32)
 
     return jax.jit(fn)

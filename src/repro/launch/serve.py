@@ -3,8 +3,9 @@
 Three modes, matching the paper's end-to-end story adapted to a serving stack:
   * ``--trees``: train an RF on a synthetic Shuttle-like dataset, convert to
     the integer-only packed form, and serve batched predictions through the
-    three implementations (float / flint / integer), reporting agreement and
-    latency — the InTreeger pipeline as a service.
+    three modes (float / flint / integer) and every execution backend
+    (reference jnp, Pallas kernel, compiled native C), reporting agreement
+    and latency — the InTreeger pipeline as a service.
   * ``--trees --gateway``: the async serving gateway end-to-end.  Trains
     several forests, registers them in a versioned ``ModelRegistry`` (one via
     the trees/io JSON artifact boundary), then replays a simulated-client
@@ -13,10 +14,11 @@ Three modes, matching the paper's end-to-end story adapted to a serving stack:
     hot-swap of one model to a new version.  Requests flow
     ``Gateway.submit → QuantizedKeyCache → MicroBatcher (coalesce to
     block-shaped batches under a latency deadline, with admission control)
-    → ModelRegistry → TreeEngine (shape-bucketed jit)``, and the run ends
-    with a per-model metrics table (throughput, p50/p95/p99 latency, batch
-    occupancy, cache hit rate) plus a bit-identity check of gateway outputs
-    against direct ``TreeEngine.predict_scores``.
+    → ModelRegistry → TreeEngine (shape-bucketed, over the ``--gw-backend``
+    execution backend)``, and the run ends with a per-model metrics table
+    (throughput, p50/p95/p99 latency, batch occupancy, cache hit rate) plus
+    a bit-identity check of gateway outputs against direct
+    ``TreeEngine.predict_scores``.
   * LM mode: load a smoke config and run batched prefill+decode generation.
 
   PYTHONPATH=src python -m repro.launch.serve --trees --rows 20000
@@ -34,6 +36,7 @@ import numpy as np
 
 
 def serve_trees(args):
+    from repro.backends import have_c_toolchain
     from repro.core.packing import pack_forest
     from repro.data.tabular import make_shuttle_like, train_test_split
     from repro.serve.engine import TreeEngine
@@ -51,7 +54,12 @@ def serve_trees(args):
         f"(float: {packed.nbytes_float()/1e3:.1f} kB)"
     )
     engines = {m: TreeEngine(packed, mode=m) for m in ("float", "flint", "integer")}
-    engines["integer-pallas"] = TreeEngine(packed, mode="integer", use_kernel=True)
+    engines["integer-pallas"] = TreeEngine(packed, mode="integer", backend="pallas")
+    if have_c_toolchain():
+        engines["integer-native-c"] = TreeEngine(packed, mode="integer",
+                                                 backend="native_c")
+    else:
+        print("gcc not found: skipping the native_c backend row")
     ref = None
     for name, eng in engines.items():
         eng.predict(Xte[:128])  # warmup/compile
@@ -157,6 +165,7 @@ def serve_gateway(args):
     gateway = Gateway(
         registry,
         mode=args.gw_mode,
+        backend=args.gw_backend,
         max_batch_rows=args.gw_batch_rows,
         max_delay_ms=args.gw_max_delay_ms,
         max_queue_rows=args.gw_queue_rows,
@@ -165,7 +174,9 @@ def serve_gateway(args):
     # warm every (model, bucket) pair so compiles don't pollute latency stats
     t0 = time.time()
     for mid in registry.ids():
-        registry.get(mid).engine(args.gw_mode).warm(args.gw_batch_rows)
+        registry.get(mid).engine(args.gw_mode, backend=args.gw_backend).warm(
+            args.gw_batch_rows
+        )
     print(f"warmed shape buckets in {time.time()-t0:.1f}s")
 
     def _do_swap(gw):
@@ -173,7 +184,8 @@ def serve_gateway(args):
             "shuttle-rf",
             RandomForestClassifier(n_estimators=28, max_depth=6, seed=9).fit(Xtr, ytr),
         )
-        mv.engine(args.gw_mode).warm(args.gw_batch_rows)  # warm the new version too
+        # warm the new version too
+        mv.engine(args.gw_mode, backend=args.gw_backend).warm(args.gw_batch_rows)
         print(f"  hot-swapped shuttle-rf -> v{mv.version} under live traffic")
 
     swap_done = []
@@ -201,7 +213,9 @@ def serve_gateway(args):
         for mid in registry.ids():
             X = pools[mid][:48]
             g_scores, g_preds = await gateway.submit(mid, X)
-            d_scores, d_preds = registry.get(mid).engine(args.gw_mode).predict_scores(X)
+            d_scores, d_preds = registry.get(mid).engine(
+                args.gw_mode, backend=args.gw_backend
+            ).predict_scores(X)
             ok &= bool((g_scores == d_scores).all() and (g_preds == d_preds).all())
         print(f"gateway == direct engine (bit-identical): {ok}")
         await gateway.close()
@@ -245,6 +259,11 @@ def main(argv=None):
     ap.add_argument("--gw-max-delay-ms", type=float, default=5.0)
     ap.add_argument("--gw-queue-rows", type=int, default=2048)
     ap.add_argument("--gw-mode", default="integer", choices=("float", "flint", "integer"))
+    from repro.backends import available_backends
+
+    ap.add_argument("--gw-backend", default="reference",
+                    choices=tuple(available_backends()),
+                    help="execution backend behind the gateway")
     ap.add_argument("--arch", default="granite-3-2b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)

@@ -3,18 +3,20 @@
 ``LMEngine``: batched prefill + greedy/temperature decode for the LM archs
 (jitted prefill and decode steps, KV/state cache carried on device).
 
-``TreeEngine``: the paper's serving path — a packed integer-only ensemble
-behind a batched predict() with three implementations (float / flint /
-integer jnp, + the Pallas kernel), mirroring InTreeger's deployment story.
-It is the execution backend behind the gateway (``repro.serve.gateway``):
-incoming batches are padded up to a small set of power-of-two row buckets so
-each (model, mode, bucket) compiles exactly once, no matter how ragged the
-request stream is.  Tree traversal is row-independent, so padding rows never
-perturbs real rows — bucketed outputs are bit-identical to unbucketed ones.
+``TreeEngine``: the paper's serving path — a thin shape-bucketing wrapper
+over any registered :class:`~repro.backends.TreeBackend` (reference jnp,
+Pallas kernel, or the emitted C compiled into a shared library), mirroring
+InTreeger's "one model, any hardware" deployment story.  It is the execution
+layer behind the gateway (``repro.serve.gateway``): for backends that compile
+per shape, incoming batches are padded up to a small set of power-of-two row
+buckets so each (model, mode, backend, bucket) compiles exactly once, no
+matter how ragged the request stream is.  Tree traversal is row-independent,
+so padding rows never perturb real rows — bucketed outputs are bit-identical
+to unbucketed ones.  Shape-oblivious backends (native C) skip padding
+entirely; the engine consults ``backend.capabilities`` for both decisions.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax
@@ -64,52 +66,84 @@ def bucket_rows(b: int, *, max_bucket: int = 4096) -> int:
 
 
 class TreeEngine:
-    """Packed-ensemble execution backend.
+    """Shape-bucketing wrapper over one :class:`~repro.backends.TreeBackend`.
 
-    ``predict``/``predict_scores`` accept any row count; internally the batch
-    is padded to a :func:`bucket_rows` bucket so the jitted function compiles
-    once per bucket (tracked in ``compiled_buckets``).
+    ``backend`` is either a registered backend name (``"reference"``,
+    ``"pallas"``, ``"native_c"``) or an already-constructed backend instance
+    (then ``packed``/``mode`` are taken from it).  ``predict``/
+    ``predict_scores`` accept any row count; for shape-compiling backends the
+    batch is padded to a :func:`bucket_rows` bucket so each bucket compiles
+    once (tracked in ``compiled_buckets``).  ``max_bucket`` defaults to the
+    backend's ``preferred_block_rows`` hint so padded shapes line up with its
+    internal tiling.
     """
 
-    def __init__(self, packed, *, mode: str = "integer", use_kernel: bool = False,
-                 kernel_kwargs: Optional[dict] = None, max_bucket: int = 4096):
-        from repro.core.ensemble import make_predict_fn
-        from repro.kernels.ops import packed_predict_integer
+    def __init__(self, packed=None, *, mode: str = "integer",
+                 backend="reference", backend_kwargs: Optional[dict] = None,
+                 max_bucket: Optional[int] = None):
+        from repro.backends import create_backend
 
-        self.packed = packed
-        self.mode = mode
-        self.max_bucket = max_bucket
-        self.compiled_buckets: set[int] = set()
-        if use_kernel:
-            assert mode == "integer", "the Pallas kernel implements the integer path"
-            kw = kernel_kwargs or {}
-            self._fn = lambda x: packed_predict_integer(packed, x, **kw)
+        if isinstance(backend, str):
+            self.backend = create_backend(
+                backend, packed, mode=mode, **(backend_kwargs or {})
+            )
         else:
-            self._fn = make_predict_fn(packed, mode)
+            self.backend = backend
+        self.packed = self.backend.packed
+        self.mode = self.backend.mode
+        caps = self.backend.capabilities
+        self.max_bucket = max_bucket or caps.preferred_block_rows or 4096
+        self.compiled_buckets: set[int] = set()
+
+    @property
+    def backend_name(self) -> str:
+        return self.backend.name
 
     @property
     def deterministic(self) -> bool:
         """True when outputs are bit-exact integer scores (cacheable)."""
-        return self.mode in ("flint", "integer")
+        return self.backend.deterministic
 
     def warm(self, max_rows: int) -> None:
-        """Compile every power-of-two row bucket up to ``max_rows`` so the
-        first live batches don't pay jit latency."""
+        """Pre-compile every bucket any batch of 1..``max_rows`` rows can map
+        to: the power-of-two buckets below ``max_bucket``, plus the
+        ``max_bucket``-multiple shapes used once batches reach the cap.  For
+        shape-oblivious backends one call builds the artifact (e.g. compiles
+        the native library) and no further shapes exist."""
+        zeros = lambda nb: np.zeros((nb, self.packed.n_features), np.float32)
+        if not self.backend.capabilities.compiles_per_shape:
+            self.predict(zeros(1))
+            return
+        # `top` is the bucket the largest batch rounds UP to — walking only to
+        # max_rows would leave the covering bucket cold (e.g. 20 rows -> 32)
+        top = bucket_rows(max_rows, max_bucket=self.max_bucket)
         nb = 1
-        while nb <= max_rows:
-            self.predict(np.zeros((nb, self.packed.n_features), np.float32))
+        while nb <= top and nb < self.max_bucket:
+            self.predict(zeros(nb))
             nb *= 2
+        if top >= self.max_bucket:
+            for m in range(self.max_bucket, top + 1, self.max_bucket):
+                self.predict(zeros(m))
+
+    def padded_rows(self, b: int) -> int:
+        """Rows actually executed for a ``b``-row batch: the bucket shape
+        for compiling backends, ``b`` itself for shape-oblivious ones."""
+        if not self.backend.capabilities.compiles_per_shape:
+            return b
+        return bucket_rows(b, max_bucket=self.max_bucket)
 
     def _run(self, X):
         X = np.asarray(X, np.float32)
         if X.ndim != 2:
             raise ValueError(f"expected (B, F) features, got shape {X.shape}")
         b = X.shape[0]
-        nb = bucket_rows(b, max_bucket=self.max_bucket)
+        nb = self.padded_rows(b)
         if nb != b:
             X = np.concatenate([X, np.zeros((nb - b, X.shape[1]), np.float32)])
-        self.compiled_buckets.add(nb)
-        scores, preds = self._fn(jnp.asarray(X))
+        scores, preds = self.backend.predict_scores(X)
+        if self.backend.capabilities.compiles_per_shape:
+            # only a predict that actually returned has compiled its bucket
+            self.compiled_buckets.add(nb)
         return np.asarray(scores)[:b], np.asarray(preds)[:b]
 
     def predict(self, X) -> np.ndarray:

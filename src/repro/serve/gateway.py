@@ -4,8 +4,10 @@
 first probes the :class:`QuantizedKeyCache` (exact FlInt-key match — safe
 because the flint/integer engines are bit-deterministic); rows that miss are
 coalesced by the :class:`MicroBatcher` into block-shaped batches and executed
-on the :class:`TreeEngine` of the model's *current* registry version, then
-inserted into the cache.  The response stitches cached and computed rows back
+on the :class:`TreeEngine` of the model's *current* registry version for the
+gateway's configured ``backend`` (reference / pallas / native_c — all
+bit-identical in the deterministic modes, so cache entries stay keyed on
+(model, version, mode) only), then inserted into the cache.  The response stitches cached and computed rows back
 into request order, so callers always see exactly what a direct
 ``TreeEngine.predict_scores`` on their rows would return, bit for bit.
 
@@ -19,8 +21,8 @@ import time
 
 import numpy as np
 
+from repro.backends import backend_class
 from repro.serve.cache import QuantizedKeyCache, row_keys
-from repro.serve.engine import bucket_rows
 from repro.serve.metrics import MetricsRegistry
 from repro.serve.queue import AdmissionError, MicroBatcher
 from repro.serve.registry import ModelRegistry
@@ -28,15 +30,25 @@ from repro.serve.registry import ModelRegistry
 
 class Gateway:
     def __init__(self, registry: ModelRegistry, *, mode: str = "integer",
-                 use_kernel: bool = False, max_batch_rows: int = 256,
+                 backend: str = "reference", max_batch_rows: int = 256,
                  max_delay_ms: float = 2.0, max_queue_rows: int = 4096,
                  cache_rows: int = 65536):
         self.registry = registry
         self.mode = mode
-        self.use_kernel = use_kernel
+        self.backend = backend
         self.metrics = MetricsRegistry()
-        # the cache is only sound for bit-deterministic integer outputs
-        self.cache = QuantizedKeyCache(cache_rows if mode in ("flint", "integer") else 0)
+        # validate the route up front and let the backend's declared
+        # capabilities decide cacheability: the cache is only sound when the
+        # backend promises bit-deterministic outputs for this mode
+        caps = backend_class(backend).capabilities
+        if mode not in caps.modes:
+            raise ValueError(
+                f"backend {backend!r} does not implement mode {mode!r}; "
+                f"supported modes: {caps.modes}"
+            )
+        self.cache = QuantizedKeyCache(
+            cache_rows if mode in caps.deterministic_modes else 0
+        )
         self.batcher = MicroBatcher(
             self._execute,
             max_batch_rows=max_batch_rows,
@@ -49,11 +61,11 @@ class Gateway:
     def _execute(self, model_id: str, X: np.ndarray):
         """Batch executor handed to the MicroBatcher (runs in a thread)."""
         mv = self.registry.get(model_id)  # resolve version at dispatch time
-        eng = mv.engine(self.mode, use_kernel=self.use_kernel)
+        eng = mv.engine(self.mode, backend=self.backend)
         scores, preds = eng.predict_scores(X)
         # meta = the version that actually computed, so cache fills are keyed
         # consistently even when a hot-swap lands between submit and dispatch
-        return scores, preds, bucket_rows(len(X), max_bucket=eng.max_bucket), mv.version
+        return scores, preds, eng.padded_rows(len(X)), mv.version
 
     # -------------------------------------------------------------- submit
     async def submit(self, model_id: str, X):

@@ -9,7 +9,8 @@ Each ``register_*`` call creates a new immutable :class:`ModelVersion` and
 atomically repoints the model id at it (hot-swap).  In-flight batches formed
 against the previous version keep their reference and finish on it; new
 requests route to the new version.  Engines are built lazily per (version,
-mode) and memoized, so a registry fronts every execution mode with one
+mode, backend) and memoized, so a registry fronts every (mode, backend)
+combination — reference jnp, Pallas kernel, compiled native C — with one
 compile set per version.
 """
 from __future__ import annotations
@@ -31,12 +32,19 @@ class ModelVersion:
     _engines: dict = field(default_factory=dict, repr=False)
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
 
-    def engine(self, mode: str = "integer", *, use_kernel: bool = False) -> TreeEngine:
-        key = (mode, use_kernel)
+    def engine(self, mode: str = "integer", *, backend: str = "reference",
+               backend_kwargs: dict = None) -> TreeEngine:
+        """The memoized TreeEngine for one (mode, backend) route.
+
+        ``backend_kwargs`` only apply on the call that first builds the
+        engine; later lookups for the same (mode, backend) return it as-is.
+        """
+        key = (mode, backend)
         with self._lock:
             if key not in self._engines:
                 self._engines[key] = TreeEngine(
-                    self.packed, mode=mode, use_kernel=use_kernel
+                    self.packed, mode=mode, backend=backend,
+                    backend_kwargs=backend_kwargs,
                 )
             return self._engines[key]
 

@@ -1,3 +1,4 @@
+import shutil
 import sys
 import types
 
@@ -45,6 +46,28 @@ except ImportError:
     _hyp.strategies = _st
     sys.modules["hypothesis"] = _hyp
     sys.modules["hypothesis.strategies"] = _st
+
+
+# ---------------------------------------------------------------------------
+# shared `requires_gcc` marker: codegen / native-backend tests need a C
+# toolchain; on toolchain-less hosts they must *skip*, not error.  Usage:
+#     @pytest.mark.requires_gcc
+# ---------------------------------------------------------------------------
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "requires_gcc: test compiles emitted C; skipped when gcc is absent",
+    )
+
+
+def pytest_collection_modifyitems(config, items):
+    if shutil.which("gcc") is not None:
+        return
+    skip_gcc = pytest.mark.skip(reason="gcc not available")
+    for item in items:
+        if "requires_gcc" in item.keywords:
+            item.add_marker(skip_gcc)
 
 
 @pytest.fixture(scope="session")

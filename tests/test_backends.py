@@ -1,0 +1,218 @@
+"""Cross-backend conformance: the backend layer's anchor suite.
+
+InTreeger's claim — one trained ensemble, bit-identical integer-only
+inference on any hardware — becomes testable through the TreeBackend
+protocol: for the deterministic modes (flint/integer), every registered
+backend must produce *bit-identical* scores and predictions on randomized
+forests.  Plus: registry lookup/error behavior, capability validation,
+TreeEngine bucketing edge cases, and the deep-tree C emitter guard.
+
+Run standalone via ``make conformance``.
+"""
+import numpy as np
+import pytest
+
+from repro.backends import (
+    BackendCapabilities,
+    TreeBackend,
+    available_backends,
+    backend_class,
+    create_backend,
+)
+from repro.serve.engine import TreeEngine, bucket_rows
+
+
+@pytest.fixture(scope="module", params=[(3, 7, 5), (11, 16, 7)],
+                ids=["t7d5", "t16d7"])
+def random_case(request):
+    """(packed, rows): a randomized forest + probe rows, per param seed."""
+    from repro.core.packing import pack_forest
+    from repro.data.tabular import make_shuttle_like, train_test_split
+    from repro.trees.forest import RandomForestClassifier
+
+    seed, n_trees, depth = request.param
+    X, y = make_shuttle_like(n=3000, seed=seed)
+    Xtr, ytr, Xte, _ = train_test_split(X, y, seed=seed)
+    rf = RandomForestClassifier(
+        n_estimators=n_trees, max_depth=depth, seed=seed
+    ).fit(Xtr, ytr)
+    return pack_forest(rf), Xte[:97]  # odd row count: exercises padding
+
+
+def _scores(backend, rows):
+    s, p = backend.predict_scores(rows)
+    return np.asarray(s), np.asarray(p)
+
+
+# ------------------------------------------------------------------ registry
+
+def test_registry_has_all_three_backends():
+    assert {"reference", "pallas", "native_c"} <= set(available_backends())
+
+
+def test_registry_unknown_name_lists_available(small_packed):
+    with pytest.raises(KeyError, match="reference"):
+        backend_class("no-such-backend")
+    with pytest.raises(KeyError, match="no-such-backend"):
+        create_backend("no-such-backend", small_packed)
+
+
+def test_backend_rejects_unsupported_mode(small_packed):
+    # pallas implements only the paper's integer path
+    assert backend_class("pallas").capabilities.modes == ("integer",)
+    with pytest.raises(ValueError, match="pallas"):
+        create_backend("pallas", small_packed, mode="float")
+
+
+def test_capability_flags():
+    ref = backend_class("reference").capabilities
+    nat = backend_class("native_c").capabilities
+    pal = backend_class("pallas").capabilities
+    assert set(ref.modes) == {"float", "flint", "integer"}
+    assert ref.deterministic_modes == ("flint", "integer")
+    assert ref.compiles_per_shape and pal.compiles_per_shape
+    assert not nat.compiles_per_shape  # the C loop takes any row count
+    assert pal.preferred_block_rows == 256  # aligns buckets with kernel tiles
+
+
+# --------------------------------------------------- cross-backend identity
+
+def test_reference_vs_pallas_integer_bit_identical(random_case):
+    packed, rows = random_case
+    s_ref, p_ref = _scores(create_backend("reference", packed, mode="integer"), rows)
+    s_pal, p_pal = _scores(create_backend("pallas", packed, mode="integer"), rows)
+    np.testing.assert_array_equal(s_ref, s_pal)
+    np.testing.assert_array_equal(p_ref, p_pal)
+
+
+@pytest.mark.requires_gcc
+@pytest.mark.parametrize("mode", ["flint", "integer"])
+def test_reference_vs_native_c_bit_identical(random_case, mode):
+    packed, rows = random_case
+    s_ref, p_ref = _scores(create_backend("reference", packed, mode=mode), rows)
+    s_nat, p_nat = _scores(create_backend("native_c", packed, mode=mode), rows)
+    assert s_nat.dtype == s_ref.dtype
+    np.testing.assert_array_equal(s_ref, s_nat)
+    np.testing.assert_array_equal(p_ref, p_nat)
+
+
+@pytest.mark.requires_gcc
+def test_all_backends_identical_through_engine(small_packed, shuttle_small):
+    """The acceptance property, at the TreeEngine level: same model, three
+    backends, bit-identical integer scores through the bucketed path."""
+    _, _, Xte, _ = shuttle_small
+    rows = Xte[:50]
+    outs = {
+        name: TreeEngine(small_packed, mode="integer", backend=name).predict_scores(rows)
+        for name in ("reference", "pallas", "native_c")
+    }
+    s_ref, p_ref = outs["reference"]
+    for name in ("pallas", "native_c"):
+        np.testing.assert_array_equal(outs[name][0], s_ref)
+        np.testing.assert_array_equal(outs[name][1], p_ref)
+
+
+@pytest.mark.requires_gcc
+def test_gateway_serves_same_model_through_every_backend(small_forest, shuttle_small):
+    """Gateway/ModelRegistry route per-(model, mode, backend) and all
+    deterministic-mode responses are bit-identical across backends."""
+    import asyncio
+
+    from repro.serve.gateway import Gateway
+    from repro.serve.registry import ModelRegistry
+
+    _, _, Xte, _ = shuttle_small
+    rows = Xte[:16]
+    reg = ModelRegistry()
+    reg.register_forest("m", small_forest)
+
+    results = {}
+    for name in ("reference", "pallas", "native_c"):
+        gw = Gateway(reg, mode="integer", backend=name, max_delay_ms=1.0)
+        s, p = asyncio.run(gw.submit("m", rows))
+        asyncio.run(gw.close())
+        results[name] = (s, p)
+    s_ref, p_ref = results["reference"]
+    for name in ("pallas", "native_c"):
+        np.testing.assert_array_equal(results[name][0], s_ref)
+        np.testing.assert_array_equal(results[name][1], p_ref)
+    # one engine per (mode, backend) route, memoized on the version
+    mv = reg.get("m")
+    assert mv.engine("integer", backend="pallas") is mv.engine("integer", backend="pallas")
+    assert mv.engine("integer", backend="pallas") is not mv.engine("integer")
+
+
+# -------------------------------------------------------- engine bucketing
+
+def test_bucket_rows_at_and_past_the_cap():
+    assert bucket_rows(4096, max_bucket=4096) == 4096
+    assert bucket_rows(4097, max_bucket=4096) == 8192
+    assert bucket_rows(8, max_bucket=8) == 8
+    assert bucket_rows(9, max_bucket=8) == 16
+    assert bucket_rows(17, max_bucket=8) == 24
+
+
+class _RaisingBackend(TreeBackend):
+    name = "raising-stub"
+    capabilities = BackendCapabilities(
+        modes=("integer",), deterministic_modes=("integer",)
+    )
+
+    def predict_scores(self, X):
+        raise RuntimeError("backend exploded")
+
+
+def test_failed_predict_does_not_mark_bucket_compiled(small_packed):
+    eng = TreeEngine(backend=_RaisingBackend(small_packed, "integer"))
+    with pytest.raises(RuntimeError, match="exploded"):
+        eng.predict(np.zeros((5, small_packed.n_features), np.float32))
+    assert eng.compiled_buckets == set()  # a raising predict compiled nothing
+
+
+def test_warm_covers_max_bucket_multiples(small_packed, shuttle_small):
+    """warm() must pre-compile the max_bucket-multiple shapes that batches
+    with b >= max_bucket are padded to, not just the power-of-two buckets."""
+    _, _, Xte, _ = shuttle_small
+    eng = TreeEngine(small_packed, mode="integer", max_bucket=8)
+    eng.warm(20)
+    assert eng.compiled_buckets == {1, 2, 4, 8, 16, 24}
+    # every batch size the warm range promises is now a known bucket
+    pre = set(eng.compiled_buckets)
+    for b in (3, 8, 9, 20):
+        eng.predict_scores(Xte[:b])
+    assert eng.compiled_buckets == pre
+
+
+def test_warm_covers_rounded_up_power_of_two(small_packed, shuttle_small):
+    """A non-power-of-two max_rows must still warm the bucket its largest
+    batches round UP to (warm(20) serves 17..20-row batches from bucket 32)."""
+    _, _, Xte, _ = shuttle_small
+    eng = TreeEngine(small_packed, mode="integer", max_bucket=64)
+    eng.warm(20)
+    assert eng.compiled_buckets == {1, 2, 4, 8, 16, 32}
+    pre = set(eng.compiled_buckets)
+    eng.predict_scores(Xte[:17])
+    assert eng.compiled_buckets == pre
+
+
+def test_engine_skips_padding_for_shape_oblivious_backends(small_packed, shuttle_small):
+    class Probe(TreeBackend):
+        name = "probe"
+        capabilities = BackendCapabilities(
+            modes=("integer",), deterministic_modes=("integer",),
+            compiles_per_shape=False,
+        )
+        seen = []
+
+        def predict_scores(self, X):
+            self.seen.append(X.shape[0])
+            c = self.packed.n_classes
+            return (np.zeros((X.shape[0], c), np.uint32),
+                    np.zeros(X.shape[0], np.int32))
+
+    _, _, Xte, _ = shuttle_small
+    eng = TreeEngine(backend=Probe(small_packed, "integer"))
+    eng.predict_scores(Xte[:5])
+    assert eng.backend.seen == [5]  # not padded to 8
+    eng.warm(64)
+    assert eng.backend.seen == [5, 1]  # warm = one artifact-building call

@@ -1,6 +1,5 @@
 """The paper's literal deliverable: integer-only if-else C.  When gcc is
 available we compile the emitted file and diff argmax against the JAX path."""
-import shutil
 import subprocess
 import tempfile
 from pathlib import Path
@@ -9,10 +8,8 @@ import numpy as np
 import pytest
 
 from repro.codegen.c_emitter import emit_c, emit_test_harness
-from repro.core.ensemble import predict_integer
+from repro.core.ensemble import predict_float, predict_integer
 from repro.core.flint import float_to_key_np
-
-HAS_GCC = shutil.which("gcc") is not None
 
 
 def test_emit_integer_c_structure(small_packed):
@@ -30,7 +27,73 @@ def test_emit_float_c_structure(small_packed):
     assert "f;" in src
 
 
-@pytest.mark.skipif(not HAS_GCC, reason="gcc not available")
+def test_harness_matches_mode_data_type(small_packed):
+    """The stdin harness must read the element type the predict prototype
+    expects: float32 rows for float mode, int32 FlInt keys otherwise."""
+    f = small_packed.n_features
+    for mode in ("integer", "flint"):
+        src = emit_test_harness(small_packed, 4, mode=mode)
+        assert f"static int32_t row[{f}]" in src
+        assert "predict_class(const int32_t* data)" in src
+        assert "sizeof(int32_t)" in src
+    src = emit_test_harness(small_packed, 4, mode="float")
+    assert f"static float row[{f}]" in src
+    assert "predict_class(const float* data)" in src
+    assert "sizeof(float)" in src
+
+
+def _deep_chain_packed(depth):
+    """A single degenerate tree: a right-leaning chain ``depth`` levels deep.
+
+    Node 2k is internal (splits on feature 0), node 2k+1 is its left leaf,
+    the final node is the rightmost leaf — worst case for a recursive
+    emitter, which would nest two Python frames per level.
+    """
+    from repro.core.packing import PackedEnsemble
+    from repro.core.fixedpoint import prob_to_fixed_np
+
+    n = 2 * depth + 1
+    feature = np.full((1, n), -1, np.int32)
+    threshold = np.zeros((1, n), np.float32)
+    left = np.tile(np.arange(n, dtype=np.int32), (1, 1))
+    right = left.copy()
+    probs = np.zeros((1, n, 2), np.float64)
+    for k in range(depth):
+        node = 2 * k
+        feature[0, node] = 0
+        threshold[0, node] = float(k)
+        left[0, node] = node + 1  # leaf
+        right[0, node] = node + 2  # next internal (or final leaf)
+        probs[0, node + 1] = (1.0, 0.0)
+    probs[0, n - 1] = (0.0, 1.0)
+    return PackedEnsemble(
+        feature=feature,
+        threshold=threshold,
+        threshold_key=float_to_key_np(threshold),
+        left=left,
+        right=right,
+        leaf_probs=probs.astype(np.float32),
+        leaf_fixed=prob_to_fixed_np(probs, 1),
+        n_trees=1,
+        n_classes=2,
+        n_features=1,
+        max_depth=depth,
+    )
+
+
+def test_emit_deep_tree_beyond_recursion_limit():
+    """Depth ~1500 would need ~3000 nested Python frames with a recursive
+    emitter; the explicit-stack emitter must handle it."""
+    import sys
+
+    depth = sys.getrecursionlimit()  # >> the safe recursion budget
+    packed = _deep_chain_packed(depth)
+    src = emit_c(packed, mode="integer")
+    assert src.count("{") == src.count("}")
+    assert src.count("if (data[") == depth  # one branch per chain level
+
+
+@pytest.mark.requires_gcc
 def test_compiled_c_matches_jax(small_packed, shuttle_small):
     _, _, Xte, _ = shuttle_small
     Xte = Xte[:500]
@@ -51,7 +114,32 @@ def test_compiled_c_matches_jax(small_packed, shuttle_small):
     np.testing.assert_array_equal(c_preds, np.asarray(jax_preds))
 
 
-@pytest.mark.skipif(not HAS_GCC, reason="gcc not available")
+@pytest.mark.requires_gcc
+def test_compiled_float_harness_matches_jax(small_packed, shuttle_small):
+    """Float-mode harness reads float32 rows (regression: it used to read
+    int32 regardless of mode, so float-mode binaries saw garbage)."""
+    _, _, Xte, _ = shuttle_small
+    Xte = Xte[:200]
+    src = emit_c(small_packed, mode="float") + emit_test_harness(
+        small_packed, len(Xte), mode="float"
+    )
+    with tempfile.TemporaryDirectory() as d:
+        c_file = Path(d) / "model.c"
+        binary = Path(d) / "model"
+        c_file.write_text(src)
+        subprocess.run(
+            ["gcc", "-O2", "-o", str(binary), str(c_file)], check=True, capture_output=True
+        )
+        out = subprocess.run(
+            [str(binary)], input=Xte.astype("<f4").tobytes(),
+            capture_output=True, check=True,
+        )
+        c_preds = np.array([int(v) for v in out.stdout.split()])
+    _, jax_preds = predict_float(small_packed, Xte)
+    np.testing.assert_array_equal(c_preds, np.asarray(jax_preds))
+
+
+@pytest.mark.requires_gcc
 def test_c_binary_size_reported(small_packed):
     """Analog of the paper's Sec. IV-E memory-footprint measurement."""
     src = emit_c(small_packed, mode="integer")

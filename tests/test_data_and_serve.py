@@ -60,7 +60,7 @@ def test_lm_engine_greedy_deterministic():
 def test_tree_engine_all_paths_agree(small_packed, shuttle_small):
     _, _, Xte, yte = shuttle_small
     engines = {m: TreeEngine(small_packed, mode=m) for m in ("float", "flint", "integer")}
-    engines["kernel"] = TreeEngine(small_packed, mode="integer", use_kernel=True)
+    engines["kernel"] = TreeEngine(small_packed, mode="integer", backend="pallas")
     preds = {name: e.predict(Xte[:256]) for name, e in engines.items()}
     for name in ("flint", "integer", "kernel"):
         np.testing.assert_array_equal(preds["float"], preds[name])
