@@ -3,15 +3,19 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test conformance bench serve-trees serve-gateway
+.PHONY: test conformance check bench serve-trees serve-gateway
 
 # tier-1 verify (see ROADMAP.md)
 test:
 	$(PY) -m pytest -x -q
 
-# cross-backend bit-identity suite (reference / pallas / native_c)
+# cross-(backend, layout) bit-identity suite
+# (reference / pallas / native_c / native_c_table x padded / ragged / leaf_major)
 conformance:
 	$(PY) -m pytest -q tests/test_backends.py
+
+# the full gate: tier-1 tests, then the conformance suite standalone
+check: test conformance
 
 bench:
 	$(PY) benchmarks/run.py

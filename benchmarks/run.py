@@ -190,7 +190,9 @@ def instruction_count_proxy():
 
 
 def memory_footprint():
-    """IV-E analog: deployable artifact size (the MCU had 43.5 kB total)."""
+    """IV-E analog: deployable artifact size (the MCU had 43.5 kB total),
+    now broken out per ForestIR layout — padded tables pay O(T * max_nodes)
+    while ragged pays O(sum(nodes)), so the gap widens with depth skew."""
     from repro.codegen.c_emitter import emit_c
 
     data = _datasets()["shuttle"]
@@ -201,6 +203,12 @@ def memory_footprint():
     emit(
         "ive_artifact_bytes", int_bytes,
         f"float_bytes={float_bytes};ratio={int_bytes/float_bytes:.3f};c_source={c_src}",
+    )
+    per_layout = packed.ir.nbytes_by_layout(mode="integer")
+    emit(
+        "ive_bytes_per_layout", per_layout["padded"],
+        ";".join(f"{name}={nb}" for name, nb in sorted(per_layout.items()))
+        + f";ragged_saving={1 - per_layout['ragged']/per_layout['padded']:.3f}",
     )
 
 
@@ -323,18 +331,23 @@ def backend_matrix():
     several batch sizes, per-backend ns/row.  ``reference`` and ``pallas``
     are jitted JAX on the host backend (pallas runs in interpret mode on
     CPU, so its absolute time is not meaningful — identity is the point);
-    ``native_c`` is the paper's emitted if-else C compiled -O2 into a
-    shared library and driven through ctypes.  All integer scores must be
-    bit-identical across backends (the conformance property the backend
-    layer is anchored on)."""
+    ``native_c`` is the paper's emitted if-else C and ``native_c_table`` the
+    ragged-layout table-walk C (forest-as-data vs forest-as-code — the
+    architecture comparison the paper's discussion motivates), both compiled
+    -O2 into shared libraries and driven through ctypes.  All integer scores
+    must be bit-identical across backends and layouts (the conformance
+    property the IR/backend layers are anchored on)."""
     from repro.backends import have_c_toolchain
     from repro.serve.engine import TreeEngine
 
     data = _datasets()["shuttle"]
     rf, packed, Xte, _ = _forest(data, 16, depth=6)
-    names = ["reference", "pallas"] + (["native_c"] if have_c_toolchain() else [])
-    if len(names) < 3:
-        emit("backend_matrix_native_c", 0, "gcc unavailable; native_c skipped")
+    names = ["reference", "pallas"]
+    if have_c_toolchain():
+        names += ["native_c", "native_c_table"]
+    else:
+        emit("backend_matrix_native_c", 0,
+             "gcc unavailable; native_c + native_c_table skipped")
 
     probe = Xte[:256]
     ref_scores = None
@@ -350,7 +363,8 @@ def backend_matrix():
             us = _time(eng.predict_scores, X, reps=3)
             emit(
                 f"backend_{name}_b{batch}", us,
-                f"ns_per_row={us * 1e3 / batch:.1f};buckets={sorted(eng.compiled_buckets)}",
+                f"ns_per_row={us * 1e3 / batch:.1f};layout={eng.layout};"
+                f"buckets={sorted(eng.compiled_buckets)}",
             )
 
 

@@ -1,8 +1,9 @@
-"""Quickstart: the InTreeger pipeline end-to-end in ~40 lines.
+"""Quickstart: the InTreeger pipeline end-to-end in ~60 lines.
 
-dataset -> random forest -> integer-only packed model -> three inference
-paths (float / FlInt / InTreeger) -> identical predictions + the emitted
-integer-only C file (the paper's deliverable).
+dataset -> random forest -> ForestIR (quantized once) -> layout
+materializations (padded / ragged / leaf_major) -> three inference paths
+(float / FlInt / InTreeger) and layout-pinned serving engines -> identical
+predictions + the emitted integer-only C file (the paper's deliverable).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -39,7 +40,32 @@ delta = np.abs(fixed_to_prob_np(np.asarray(acc_u32), packed.n_trees)
                - rf.predict_proba(Xte)).max()
 print(f"max probability delta vs oracle: {delta:.2e}  (paper Fig. 2: ~1e-9)")
 
-# 5. the paper's deliverable: freestanding integer-only C
+# 5. the packed tables are one *layout* of the canonical ForestIR; every
+#    other registered layout materializes from the same quantization
+ir = packed.ir
+sizes = ir.nbytes_by_layout(mode="integer")
+print("layouts:", ", ".join(f"{k}={v/1e3:.1f}kB" for k, v in sorted(sizes.items())))
+
+# 6. layout selection end-to-end: the engine materializes whatever layout
+#    the backend prefers (or the one you pin) — scores stay bit-identical
+from repro.backends import have_c_toolchain
+from repro.serve.engine import TreeEngine
+
+eng_padded = TreeEngine(ir, mode="integer")                       # padded
+eng_lm = TreeEngine(ir, mode="integer", layout="leaf_major")      # pinned
+engines = {"reference/padded": eng_padded, "reference/leaf_major": eng_lm}
+if have_c_toolchain():
+    # table-walk C over the ragged layout (backend's preferred layout)
+    engines["native_c_table/ragged"] = TreeEngine(ir, mode="integer",
+                                                  backend="native_c_table")
+s_ref, _ = eng_padded.predict_scores(Xte[:256])
+for name, eng in engines.items():
+    s, _ = eng.predict_scores(Xte[:256])
+    assert (np.asarray(s) == np.asarray(s_ref)).all(), name
+print(f"bit-identical uint32 scores across {len(engines)} (backend, layout) routes:",
+      ", ".join(sorted(engines)))
+
+# 7. the paper's deliverable: freestanding integer-only C
 c_src = emit_c(packed, mode="integer")
 open("/tmp/intreeger_model.c", "w").write(c_src)
 print(f"emitted integer-only C ({len(c_src.splitlines())} lines) "

@@ -1,17 +1,21 @@
-"""Pluggable execution backends for packed tree ensembles.
+"""Pluggable execution backends for materialized tree ensembles.
 
 One protocol (:class:`TreeBackend`: ``predict_scores(X) -> (scores, preds)``
-plus declared :class:`BackendCapabilities`) behind three implementations:
+plus declared :class:`BackendCapabilities`) behind four implementations:
 
-  * ``reference`` — the jitted jnp node-table walk (all three modes),
-  * ``pallas``    — the VMEM-tiled TPU kernel (integer mode),
-  * ``native_c``  — the paper's emitted if-else C, compiled once per model
-                    into a shared library and called via ctypes.
+  * ``reference``      — the jitted jnp node-table walk (all three modes),
+  * ``pallas``         — the VMEM-tiled TPU kernel (integer mode),
+  * ``native_c``       — the paper's emitted if-else C, compiled once per
+                         model into a shared library and called via ctypes,
+  * ``native_c_table`` — the ragged-layout table-walk C (data-as-arrays,
+                         integer/flint), same shared-library contract.
 
-Backends register by name; the serving stack (``TreeEngine`` /
-``ModelRegistry`` / ``Gateway``) routes per-(model, mode, backend) through
-:func:`create_backend` and never special-cases an implementation.  For the
-deterministic modes (flint/integer) all backends are bit-identical — see
+Backends register by name and declare which ForestIR layouts they walk
+(``supported_layouts``/``preferred_layout``); the serving stack (``TreeEngine``
+/ ``ModelRegistry`` / ``Gateway``) resolves the layout through the IR and
+routes per-(model, mode, backend, layout) via :func:`create_backend`, never
+special-casing an implementation.  For the deterministic modes (flint/integer)
+all backends are bit-identical across all supported layouts — see
 ``tests/test_backends.py`` / ``make conformance``.
 """
 from repro.backends.base import (
@@ -23,14 +27,17 @@ from repro.backends.base import (
     create_backend,
     register_backend,
 )
-from repro.backends.native_c import NativeCBackend, have_c_toolchain
+from repro.backends.native_c import CompiledCBackend, NativeCBackend, have_c_toolchain
+from repro.backends.native_c_table import NativeCTableBackend
 from repro.backends.pallas import PallasBackend
 from repro.backends.reference import ReferenceBackend
 
 __all__ = [
     "BackendCapabilities",
     "BackendUnavailable",
+    "CompiledCBackend",
     "NativeCBackend",
+    "NativeCTableBackend",
     "PallasBackend",
     "ReferenceBackend",
     "TreeBackend",

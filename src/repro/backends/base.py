@@ -25,8 +25,6 @@ import abc
 from dataclasses import dataclass
 from typing import ClassVar, Optional
 
-from repro.core.packing import PackedEnsemble
-
 
 class BackendUnavailable(RuntimeError):
     """The backend cannot run on this host (e.g. no C toolchain)."""
@@ -48,28 +46,62 @@ class BackendCapabilities:
                          (jitted backends).  False for shape-oblivious
                          backends (native C), where the engine skips
                          bucket padding entirely.
+    supported_layouts:   ForestIR layouts this backend can walk (see
+                         ``repro.ir.layouts``).  The node-table backends take
+                         ``padded``/``leaf_major`` (same (T, N) surface); the
+                         table-walk C backend takes ``ragged``.
+    preferred_layout:    the layout the serving layer materializes when the
+                         caller does not pin one.  Deterministic-mode scores
+                         are bit-identical across layouts, so this is purely
+                         a performance/footprint choice.
     """
 
     modes: tuple
     deterministic_modes: tuple
     preferred_block_rows: Optional[int] = None
     compiles_per_shape: bool = True
+    supported_layouts: tuple = ("padded",)
+    preferred_layout: str = "padded"
+
+    def require_layout(self, layout: str, backend_name: str) -> None:
+        """Fail fast when ``layout`` is not walkable — the ONE validation
+        every routing layer (backend ctor, engine, gateway) calls."""
+        if layout not in self.supported_layouts:
+            raise ValueError(
+                f"backend {backend_name!r} cannot walk layout {layout!r}; "
+                f"supported layouts: {self.supported_layouts}"
+            )
 
 
 class TreeBackend(abc.ABC):
-    """One execution strategy for a packed ensemble, fixed to one mode."""
+    """One execution strategy for a materialized forest, fixed to one mode.
+
+    ``packed`` is the layout artifact the backend walks — a
+    :class:`~repro.core.packing.PackedEnsemble` for the node-table layouts, a
+    :class:`~repro.ir.layouts.RaggedEnsemble` for ``ragged``.  The attribute
+    keeps its historical name; every artifact exposes the same metadata
+    surface (``n_trees``/``n_classes``/``n_features``/``max_depth``/
+    ``scale``/``layout``/``nbytes_*``).
+    """
 
     name: ClassVar[str]
     capabilities: ClassVar[BackendCapabilities]
 
-    def __init__(self, packed: PackedEnsemble, mode: str = "integer"):
+    def __init__(self, packed, mode: str = "integer"):
         if mode not in self.capabilities.modes:
             raise ValueError(
                 f"backend {self.name!r} does not implement mode {mode!r}; "
                 f"supported modes: {self.capabilities.modes}"
             )
+        self.capabilities.require_layout(getattr(packed, "layout", "padded"),
+                                         self.name)
         self.packed = packed
         self.mode = mode
+
+    @property
+    def layout(self) -> str:
+        """The layout of the artifact this backend was built on."""
+        return getattr(self.packed, "layout", "padded")
 
     @property
     def deterministic(self) -> bool:
@@ -116,7 +148,12 @@ def backend_class(name: str):
         ) from None
 
 
-def create_backend(name: str, packed: PackedEnsemble, *, mode: str = "integer",
+def create_backend(name: str, packed, *, mode: str = "integer",
                    **kwargs) -> TreeBackend:
-    """Instantiate a registered backend by name for one (model, mode)."""
+    """Instantiate a registered backend by name for one (model, mode).
+
+    ``packed`` must already be materialized in a layout the backend supports
+    (see :func:`repro.ir.resolve_artifact`; ``TreeEngine`` does this
+    resolution for the serving stack).
+    """
     return backend_class(name)(packed, mode, **kwargs)

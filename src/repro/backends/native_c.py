@@ -1,13 +1,18 @@
-"""NativeCBackend: serve the paper's literal C deliverable.
+"""Compiled-C backends: the paper's if-else deliverable, servable via ctypes.
 
-``codegen/c_emitter.emit_c`` produces InTreeger's actual artifact — a
-freestanding integer-only if-else C file.  Until now the repo could only
-benchmark it offline (``codegen/native_bench``); this backend compiles it
-*once per (model, mode)* into a shared library (`gcc -O2 -shared -fPIC`) and
-calls the batched entry point through ctypes, which makes the emitted C a
-first-class servable backend behind the same gateway as the JAX paths.
+``CompiledCBackend`` owns everything shared by native-code execution — build a
+C source string, compile it *once per (model, mode)* into a shared library
+(`gcc -O2 -shared -fPIC`), and call the batched entry point through ctypes —
+so a native backend is just an ``_emit_source`` hook over its layout artifact.
+Two concrete backends ride on it:
 
-Shape-oblivious: the C loop takes any row count, so ``compiles_per_shape`` is
+  * ``native_c`` (this module): InTreeger's actual artifact — the
+    freestanding if-else C of ``codegen/c_emitter.emit_c`` over the padded
+    node tables, forest-in-the-instruction-stream.
+  * ``native_c_table`` (``backends/native_c_table.py``): the ragged-layout
+    data-as-arrays table walk of ``codegen/table_emitter.emit_table_walk_c``.
+
+Shape-oblivious: the C loops take any row count, so ``compiles_per_shape`` is
 False and the serving layer skips bucket padding entirely.  In integer mode
 the C accumulates uint32 at the same scale and in the same tree order as the
 reference, so scores are bit-identical; in flint/float modes gcc (without
@@ -32,24 +37,21 @@ from repro.backends.base import (
     register_backend,
 )
 from repro.core.flint import float_to_key_np
-from repro.core.packing import PackedEnsemble
 
 
 def have_c_toolchain(cc: str = "gcc") -> bool:
     return shutil.which(cc) is not None
 
 
-@register_backend
-class NativeCBackend(TreeBackend):
-    name = "native_c"
-    capabilities = BackendCapabilities(
-        modes=("float", "flint", "integer"),
-        deterministic_modes=("flint", "integer"),
-        preferred_block_rows=None,
-        compiles_per_shape=False,
-    )
+class CompiledCBackend(TreeBackend):
+    """Shared compile-and-serve machinery for emitted-C backends.
 
-    def __init__(self, packed: PackedEnsemble, mode: str = "integer", *,
+    Subclasses implement :meth:`_emit_source` returning a translation unit
+    that defines ``predict_batch(data, n_rows, scores, preds)`` (usually the
+    mode-specific ``predict`` plus ``codegen.c_emitter.emit_batch_entry``).
+    """
+
+    def __init__(self, packed, mode: str = "integer", *,
                  cc: str = "gcc", cflags: tuple = ("-O2",)):
         super().__init__(packed, mode)
         self._cc = cc
@@ -57,6 +59,9 @@ class NativeCBackend(TreeBackend):
         self._lib = None
         self._tmpdir = None  # owns the .so for the backend's lifetime
         self._compile_lock = threading.Lock()
+
+    def _emit_source(self) -> str:
+        raise NotImplementedError
 
     # ------------------------------------------------------------- compile
     def _ensure_lib(self):
@@ -73,14 +78,10 @@ class NativeCBackend(TreeBackend):
     def _build_lib(self):
         if not have_c_toolchain(self._cc):
             raise BackendUnavailable(
-                f"native_c backend needs a C compiler; {self._cc!r} not on PATH"
+                f"{self.name} backend needs a C compiler; {self._cc!r} not on PATH"
             )
-        from repro.codegen.c_emitter import emit_batch_entry, emit_c
-
-        src = emit_c(self.packed, mode=self.mode) + emit_batch_entry(
-            self.packed, mode=self.mode
-        )
-        self._tmpdir = tempfile.TemporaryDirectory(prefix="repro_native_c_")
+        src = self._emit_source()
+        self._tmpdir = tempfile.TemporaryDirectory(prefix=f"repro_{self.name}_")
         d = Path(self._tmpdir.name)
         c_file, so_file = d / "model.c", d / "model.so"
         c_file.write_text(src)
@@ -91,7 +92,7 @@ class NativeCBackend(TreeBackend):
         )
         if proc.returncode != 0:
             raise BackendUnavailable(
-                f"{self._cc} failed to build the native backend:\n"
+                f"{self._cc} failed to build the {self.name} backend:\n"
                 + proc.stderr.decode(errors="replace")[:2000]
             )
         lib = ctypes.CDLL(str(so_file))  # RTLD_LOCAL: symbols stay per-model
@@ -130,3 +131,28 @@ class NativeCBackend(TreeBackend):
             preds.ctypes.data_as(lib.predict_batch.argtypes[3]),
         )
         return scores, preds
+
+
+@register_backend
+class NativeCBackend(CompiledCBackend):
+    """The paper's literal deliverable — if-else C — as a servable backend."""
+
+    name = "native_c"
+    capabilities = BackendCapabilities(
+        modes=("float", "flint", "integer"),
+        deterministic_modes=("flint", "integer"),
+        preferred_block_rows=None,
+        compiles_per_shape=False,
+        # the if-else emitter reads (T, N) node tables from the root down;
+        # node order within a tree does not change the emitted cascade's
+        # semantics, so both node-table layouts are accepted
+        supported_layouts=("padded", "leaf_major"),
+        preferred_layout="padded",
+    )
+
+    def _emit_source(self) -> str:
+        from repro.codegen.c_emitter import emit_batch_entry, emit_c
+
+        return emit_c(self.packed, mode=self.mode) + emit_batch_entry(
+            self.packed, mode=self.mode
+        )

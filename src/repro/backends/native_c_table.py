@@ -1,0 +1,42 @@
+"""NativeCTableBackend: the ragged layout compiled as a vectorized table walk.
+
+The fourth backend, and the first consumer of a non-padded ForestIR layout:
+``codegen/table_emitter.emit_table_walk_c`` compiles the ragged ensemble's
+CSR node arrays as static data plus a generic branch-free-select walk loop,
+into the same ``predict_batch`` shared-library contract as ``native_c``.
+Where the if-else backend puts the forest in the instruction stream (ideal
+for MCU single-row latency), this one keeps the code O(1) and streams node
+*data* — the layout trade the ARM tree-ensemble literature shows dominates
+throughput at batch, now directly measurable via
+``benchmarks/run.py backend_matrix`` (if-else vs table-walk C, same model,
+several batch sizes).
+
+Deterministic modes only (integer + flint): thresholds stay FlInt int32 keys,
+so scores are bit-identical to every other backend — the conformance suite
+holds across the layout axis too.
+"""
+from __future__ import annotations
+
+from repro.backends.base import BackendCapabilities, register_backend
+from repro.backends.native_c import CompiledCBackend
+
+
+@register_backend
+class NativeCTableBackend(CompiledCBackend):
+    name = "native_c_table"
+    capabilities = BackendCapabilities(
+        modes=("flint", "integer"),
+        deterministic_modes=("flint", "integer"),
+        preferred_block_rows=None,
+        compiles_per_shape=False,
+        supported_layouts=("ragged",),
+        preferred_layout="ragged",
+    )
+
+    def _emit_source(self) -> str:
+        from repro.codegen.c_emitter import emit_batch_entry
+        from repro.codegen.table_emitter import emit_table_walk_c
+
+        return emit_table_walk_c(self.packed, mode=self.mode) + emit_batch_entry(
+            self.packed, mode=self.mode
+        )

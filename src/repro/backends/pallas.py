@@ -28,6 +28,10 @@ class PallasBackend(TreeBackend):
         deterministic_modes=("integer",),
         preferred_block_rows=_DEFAULT_BLOCK_B,
         compiles_per_shape=True,
+        # the kernel consumes dense (T, N) VMEM-resident tables and gathers
+        # by node index, so both node-table orderings are walkable
+        supported_layouts=("padded", "leaf_major"),
+        preferred_layout="padded",
     )
 
     def __init__(self, packed: PackedEnsemble, mode: str = "integer", *,

@@ -21,6 +21,10 @@ class ReferenceBackend(TreeBackend):
         deterministic_modes=("flint", "integer"),
         preferred_block_rows=None,  # any padded shape is fine
         compiles_per_shape=True,
+        # the jnp walk gathers by node index over (T, N) tables, so any
+        # node-table layout works; node order cannot perturb scores
+        supported_layouts=("padded", "leaf_major"),
+        preferred_layout="padded",
     )
 
     def __init__(self, packed: PackedEnsemble, mode: str = "integer"):

@@ -113,20 +113,30 @@ def emit_c(packed: PackedEnsemble, mode: str = "integer") -> str:
             lines.append(f"  result[{i}] *= {_c_float(rcp)};")
     lines.append("}")
     lines.append("")
-    # argmax helper (comparisons only)
     ty = "uint32_t" if mode == "integer" else "float"
     data_t = "float" if mode == "float" else "int32_t"
-    lines += [
+    lines += emit_predict_class(c, ty, data_t)
+    return "\n".join(lines)
+
+
+def emit_predict_class(n_classes: int, acc_t: str, data_t: str) -> list:
+    """The argmax helper shared by every C emitter (comparisons only).
+
+    Cross-backend prediction bit-identity depends on the tie-breaking rule
+    (strict ``>``: first maximum wins, matching ``jnp.argmax``) being the
+    SAME in every emitted artifact — keep this the single source of it.
+    """
+    return [
         f"int predict_class(const {data_t}* data) {{",
-        f"  {ty} result[{c}];",
+        f"  {acc_t} result[{n_classes}];",
         "  predict(data, result);",
         "  int best = 0;",
-        f"  for (int i = 1; i < {c}; ++i) if (result[i] > result[best]) best = i;",
+        f"  for (int i = 1; i < {n_classes}; ++i)"
+        " if (result[i] > result[best]) best = i;",
         "  return best;",
         "}",
         "",
     ]
-    return "\n".join(lines)
 
 
 def emit_test_harness(packed: PackedEnsemble, n_samples: int,

@@ -1,0 +1,108 @@
+"""Vectorizable table-walk C: the ragged layout compiled data-as-arrays.
+
+The paper's deliverable (``c_emitter.emit_c``) encodes the forest *in the
+instruction stream* — one if-else cascade per tree, FlInt keys and fixed-point
+leaves as immediates.  That is ideal for MCU-class single-row inference but
+branchy at batch: every row takes a data-dependent path through thousands of
+conditional jumps.  This emitter is the other point in the design space the
+paper's architecture discussion motivates: the forest as *static data* (the
+``ragged`` ForestIR layout — CSR node arrays with per-tree roots and global
+child indices) plus one generic walk loop
+
+    node = root[t];
+    while (feature[node] >= 0)
+      node = (data[feature[node]] <= key[node]) ? left[node] : right[node];
+
+whose only branch is the loop itself — the child select compiles to a
+conditional move, so the walk is branch-predictor-friendly and the code
+footprint is O(1) in forest size instead of O(total_nodes).
+
+Modes mirror the deterministic pair: ``integer`` (int32 FlInt compares,
+uint32 fixed-point adds — bit-identical to every other backend) and ``flint``
+(int32 compares, float32 adds in the same per-tree order plus the same
+precomputed-reciprocal ensemble average the reference path lowers to).  The
+emitted file needs only <stdint.h>.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.codegen.c_emitter import _c_float, emit_predict_class
+
+_VALS_PER_LINE = 12
+
+
+def _i32(v: int) -> str:
+    v = int(v)
+    # INT32_MIN has no negatable literal form in C; every other value is fine
+    return "(-2147483647-1)" if v == -(1 << 31) else str(v)
+
+
+def _array_lines(name: str, ctype: str, values, fmt) -> list:
+    lines = [f"static const {ctype} {name}[{len(values)}] = {{"]
+    for i in range(0, len(values), _VALS_PER_LINE):
+        chunk = ", ".join(fmt(v) for v in values[i:i + _VALS_PER_LINE])
+        lines.append(f"  {chunk},")
+    lines.append("};")
+    return lines
+
+
+def emit_table_walk_c(ragged, mode: str = "integer") -> str:
+    """Emit a standalone table-walk C file for a ragged ensemble.
+
+    Same entry-point contract as ``c_emitter.emit_c`` — ``predict(data,
+    result)`` over FlInt int32 keys plus a comparison-only ``predict_class`` —
+    so the shared batch entry (``emit_batch_entry``) and the test harness
+    compose with it unchanged.
+    """
+    assert mode in ("integer", "flint"), (
+        "the table walk serves the deterministic integer-compare modes; "
+        "float thresholds would reintroduce the FPU the paper removes"
+    )
+    t, c = ragged.n_trees, ragged.n_classes
+    total = ragged.total_nodes
+    acc_t = "uint32_t" if mode == "integer" else "float"
+    lines = ["#include <stdint.h>", ""]
+    lines.append(
+        f"/* InTreeger table-walk ensemble ({mode} mode): ragged ForestIR layout\n"
+        f"   as static data. trees={t} classes={c} nodes={total}"
+        + (f" scale={ragged.scale}" if mode == "integer" else "")
+        + " */"
+    )
+    lines += _array_lines("node_feature", "int32_t", ragged.feature, _i32)
+    lines += _array_lines("node_key", "int32_t", ragged.threshold_key, _i32)
+    lines += _array_lines("node_left", "int32_t", ragged.left, _i32)
+    lines += _array_lines("node_right", "int32_t", ragged.right, _i32)
+    if mode == "integer":
+        leaf_vals = ragged.leaf_fixed.reshape(-1)
+        lines += _array_lines(
+            "node_leaf", "uint32_t", leaf_vals, lambda v: f"{int(v)}u"
+        )
+    else:
+        leaf_vals = ragged.leaf_probs.reshape(-1)
+        lines += _array_lines("node_leaf", "float", leaf_vals, _c_float)
+    lines += _array_lines("tree_root", "int32_t", ragged.roots, _i32)
+    lines += [
+        "",
+        f"void predict(const int32_t* data, {acc_t}* result) {{",
+        f"  for (int i = 0; i < {c}; ++i) result[i] = 0;",
+        f"  for (int t = 0; t < {t}; ++t) {{",
+        "    int32_t node = tree_root[t];",
+        "    int32_t f = node_feature[node];",
+        "    while (f >= 0) {",
+        "      node = (data[f] <= node_key[node]) ? node_left[node]"
+        " : node_right[node];",
+        "      f = node_feature[node];",
+        "    }",
+        f"    const {acc_t}* leaf = node_leaf + (long)node * {c};",
+        f"    for (int i = 0; i < {c}; ++i) result[i] += leaf[i];",
+        "  }",
+    ]
+    if mode == "flint":
+        # same precomputed float32 reciprocal the reference path's `acc / n`
+        # lowers to, applied in the same place -> bit-identical averages
+        rcp = np.float32(1.0) / np.float32(t)
+        lines.append(f"  for (int i = 0; i < {c}; ++i) result[i] *= {_c_float(rcp)};")
+    lines += ["}", ""]
+    lines += emit_predict_class(c, acc_t, "int32_t")
+    return "\n".join(lines)

@@ -1,23 +1,29 @@
-"""Pack a trained ensemble into dense, TPU-friendly node tables.
+"""The padded node-table artifact (the IR's ``padded``/``leaf_major`` layouts).
 
 This is the TPU analogue of the paper's codegen step: instead of emitting
 if-else C, we emit *tensors*.  All per-node quantities are padded to the max
 node count across trees; padding nodes are self-looping leaves with zero
 probability mass, so they are semantically inert.
 
-The integer artifacts produced here are exactly the paper's:
+Since the ForestIR refactor, ``PackedEnsemble`` is no longer the canonical
+representation — it is one *materialization* of :class:`repro.ir.ForestIR`
+(``layout == "padded"``, or ``"leaf_major"`` for the internal-first node
+ordering).  :func:`pack_forest` keeps its historical signature and produces
+bit-identical tables to the pre-IR implementation; the quantized artifacts it
+carries are exactly the paper's:
   * ``threshold_key``: FlInt int32 keys of the float thresholds,
   * ``leaf_fixed``:  uint32 fixed-point leaf probabilities at scale
-    ``floor((2**32-1)/n_trees)`` (Sec. III-A), overflow-free by construction.
+    ``floor((2**32-1)/n_trees)`` (Sec. III-A), overflow-free by construction,
+and both are quantized once, in the IR — never re-derived per layout.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
+from typing import Optional
 
 import numpy as np
 
-from repro.core.fixedpoint import prob_to_fixed_np, scale_for
-from repro.core.flint import float_to_key_np
+from repro.core.fixedpoint import scale_for
 
 
 @dataclass
@@ -33,13 +39,32 @@ class PackedEnsemble:
     n_classes: int
     n_features: int
     max_depth: int  # walk length that guarantees leaf arrival
+    # layout metadata (ForestIR refactor): which materialization these tables
+    # are, the per-tree real node counts padding erased, and a back-reference
+    # to the canonical IR so other layouts can be materialized on demand.
+    layout: str = "padded"
+    node_counts: Optional[np.ndarray] = field(default=None, repr=False)
+    ir: Optional[object] = field(default=None, repr=False, compare=False)
 
     @property
     def scale(self) -> int:
         return scale_for(self.n_trees)
 
+    def to_ir(self):
+        """The canonical IR behind these tables (recovered if not attached)."""
+        if self.ir is None:
+            from repro.ir.forest_ir import ForestIR
+
+            self.ir = ForestIR.from_packed(self)
+        return self.ir
+
     def nbytes_integer(self) -> int:
-        """Bytes of the integer-only deployment artifact."""
+        """Bytes of the integer-only deployment artifact *in this layout*.
+
+        Padded tables pay O(T * max(n_nodes)); use
+        ``ForestIR.nbytes_by_layout`` to compare against the ragged layout's
+        O(sum(n_nodes)) footprint.
+        """
         return (
             self.feature.nbytes
             + self.threshold_key.nbytes
@@ -49,7 +74,7 @@ class PackedEnsemble:
         )
 
     def nbytes_float(self) -> int:
-        """Bytes of the float deployment artifact."""
+        """Bytes of the float deployment artifact in this layout."""
         return (
             self.feature.nbytes
             + self.threshold.nbytes
@@ -60,34 +85,13 @@ class PackedEnsemble:
 
 
 def pack_forest(forest) -> PackedEnsemble:
-    trees = forest.trees_
-    T = len(trees)
-    C = forest.n_classes_
-    N = max(t.n_nodes for t in trees)
-    feature = np.full((T, N), -1, np.int32)
-    threshold = np.zeros((T, N), np.float32)
-    left = np.tile(np.arange(N, dtype=np.int32), (T, 1))
-    right = left.copy()
-    probs = np.zeros((T, N, C), np.float64)
-    for i, t in enumerate(trees):
-        n = t.n_nodes
-        feature[i, :n] = t.feature
-        threshold[i, :n] = t.threshold
-        left[i, :n] = t.left
-        right[i, :n] = t.right
-        is_leaf = t.feature < 0
-        probs[i, :n][is_leaf] = t.leaf_probs[is_leaf]
-    fixed = prob_to_fixed_np(probs, T)
-    return PackedEnsemble(
-        feature=feature,
-        threshold=threshold,
-        threshold_key=float_to_key_np(threshold),
-        left=left,
-        right=right,
-        leaf_probs=probs.astype(np.float32),
-        leaf_fixed=fixed,
-        n_trees=T,
-        n_classes=C,
-        n_features=forest.n_features_,
-        max_depth=max(t.depth for t in trees),
-    )
+    """Quantize ``forest`` into the IR and materialize the padded layout.
+
+    Kept as the one-call path from a trained forest to servable node tables;
+    the returned artifact carries ``.ir``, so every other registered layout
+    (``ragged``, ``leaf_major``) is one ``materialize`` away with no
+    re-quantization.
+    """
+    from repro.ir.forest_ir import ForestIR
+
+    return ForestIR.from_forest(forest).materialize("padded")

@@ -1,0 +1,34 @@
+"""ForestIR: the layout-aware forest representation layer.
+
+The paper compiles a trained forest straight into one fixed artifact (if-else
+C, Sec. III-B); memory layout is an *implicit* consequence of that choice.
+This package makes the layout a first-class axis instead:
+
+    forest  --quantize once-->  ForestIR  --materialize-->  layout artifact
+                                (canonical,                  (padded | ragged |
+                                 unpadded)                    leaf_major)
+
+``ForestIR`` (``forest_ir.py``) holds the canonical quantized forest — FlInt
+int32 threshold keys, uint32 fixed-point leaves, per-tree node counts, all
+unpadded — and ``layouts.py`` holds the registry of materializers that turn it
+into the concrete memory layouts the execution backends consume.  Every
+materialization of one IR is score-bit-identical in the deterministic modes
+(flint/integer); ``tests/test_backends.py`` / ``make conformance`` enforce
+this across all (layout, backend) pairs.
+"""
+from repro.ir.forest_ir import ForestIR, resolve_artifact
+from repro.ir.layouts import (
+    RaggedEnsemble,
+    available_layouts,
+    materialize,
+    register_layout,
+)
+
+__all__ = [
+    "ForestIR",
+    "RaggedEnsemble",
+    "available_layouts",
+    "materialize",
+    "register_layout",
+    "resolve_artifact",
+]

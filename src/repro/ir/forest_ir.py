@@ -1,0 +1,230 @@
+"""The canonical, layout-free forest representation.
+
+``ForestIR`` is the single point where quantization happens — the paper's
+codegen-time conversions (Sec. III-A/III-B): FlInt int32 keys of every float32
+threshold and uint32 fixed-point leaf probabilities at scale
+``floor((2**32-1)/n_trees)``.  Everything downstream (node-table packing, the
+Pallas kernel's padded tables, both native-C emitters) is a *materialization*
+of this IR into a concrete memory layout and must not re-quantize; that is
+what makes cross-layout bit-identity structural rather than coincidental.
+
+Storage is CSR-style: per-node arrays for all trees concatenated in tree
+order, with ``node_offsets`` (T+1,) delimiting each tree's slice.  Child
+indices (``left``/``right``) are *tree-local*; layouts that want global
+indices (``ragged``) rebase them at materialization time.  No padding exists
+at this level — per-tree node counts are first-class, so depth-skewed forests
+cost ``sum(n_nodes)`` nodes, not ``T * max(n_nodes)``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.fixedpoint import prob_to_fixed_np, scale_for
+from repro.core.flint import float_to_key_np
+
+
+def tree_depth_from_arrays(feature, left, right) -> int:
+    """Longest root-to-leaf path of one tree given its flat arrays."""
+    depth = 0
+    frontier = [(0, 0)]
+    while frontier:
+        node, d = frontier.pop()
+        if feature[node] < 0:
+            depth = max(depth, d)
+            continue
+        frontier.append((int(left[node]), d + 1))
+        frontier.append((int(right[node]), d + 1))
+    return depth
+
+
+@dataclass
+class ForestIR:
+    """Canonical quantized forest: unpadded CSR node arrays + quantized data.
+
+    Arrays are all ``(total_nodes, ...)`` with trees concatenated in ensemble
+    order; ``node_offsets[t] : node_offsets[t+1]`` is tree ``t``'s slice.
+    ``left``/``right`` are tree-local node indices; leaves (``feature == -1``)
+    self-loop (``left == right == self``).
+    """
+
+    feature: np.ndarray  # (total,) int32, -1 for leaf
+    threshold: np.ndarray  # (total,) float32
+    threshold_key: np.ndarray  # (total,) int32 (FlInt keys)
+    left: np.ndarray  # (total,) int32, tree-local
+    right: np.ndarray  # (total,) int32, tree-local
+    leaf_probs: np.ndarray  # (total, C) float64 (zeros on internal nodes)
+    leaf_fixed: np.ndarray  # (total, C) uint32
+    node_offsets: np.ndarray  # (T+1,) int64
+    tree_depths: np.ndarray  # (T,) int32
+    n_trees: int
+    n_classes: int
+    n_features: int
+    _layouts: dict = field(default_factory=dict, repr=False, compare=False)
+
+    # ------------------------------------------------------------ properties
+    @property
+    def node_counts(self) -> np.ndarray:
+        """Per-tree node counts (T,) — the quantity padding erases."""
+        return np.diff(self.node_offsets).astype(np.int64)
+
+    @property
+    def total_nodes(self) -> int:
+        return int(self.node_offsets[-1])
+
+    @property
+    def max_nodes(self) -> int:
+        return int(self.node_counts.max())
+
+    @property
+    def max_depth(self) -> int:
+        """Walk length that guarantees leaf arrival in every tree."""
+        return int(self.tree_depths.max())
+
+    @property
+    def scale(self) -> int:
+        return scale_for(self.n_trees)
+
+    # --------------------------------------------------------- constructors
+    @classmethod
+    def from_forest(cls, forest) -> "ForestIR":
+        """Quantize a trained forest (``trees_``/``n_classes_``/
+        ``n_features_`` duck type) into the canonical IR."""
+        trees = forest.trees_
+        T = len(trees)
+        C = forest.n_classes_
+        offsets = np.zeros(T + 1, np.int64)
+        np.cumsum([t.n_nodes for t in trees], out=offsets[1:])
+        total = int(offsets[-1])
+        probs = np.zeros((total, C), np.float64)
+        for t, off in zip(trees, offsets[:-1]):
+            is_leaf = t.feature < 0
+            probs[off:off + t.n_nodes][is_leaf] = t.leaf_probs[is_leaf]
+        threshold = np.concatenate([t.threshold for t in trees]).astype(np.float32)
+        return cls(
+            feature=np.concatenate([t.feature for t in trees]).astype(np.int32),
+            threshold=threshold,
+            threshold_key=float_to_key_np(threshold),
+            left=np.concatenate([t.left for t in trees]).astype(np.int32),
+            right=np.concatenate([t.right for t in trees]).astype(np.int32),
+            leaf_probs=probs,
+            leaf_fixed=prob_to_fixed_np(probs, T),
+            node_offsets=offsets,
+            tree_depths=np.asarray([t.depth for t in trees], np.int32),
+            n_trees=T,
+            n_classes=C,
+            n_features=forest.n_features_,
+        )
+
+    @classmethod
+    def from_packed(cls, packed) -> "ForestIR":
+        """Recover the IR from a padded ``PackedEnsemble``.
+
+        Padding nodes are, by construction, *trailing* self-looping leaves
+        with zero probability mass in both representations; real leaves carry
+        a class distribution summing to ~1, so their fixed row sum is > 0.
+        That makes the per-tree real node count recoverable exactly.  The
+        quantized data (``threshold_key``/``leaf_fixed``) is sliced, never
+        recomputed, so round-tripping preserves bit-exactness.
+        """
+        T, N = packed.feature.shape
+        counts = np.empty(T, np.int64)
+        selfloop = np.arange(N, dtype=np.int32)
+        for t in range(T):
+            pad = (
+                (packed.feature[t] < 0)
+                & (packed.left[t] == selfloop)
+                & (packed.right[t] == selfloop)
+                & (packed.leaf_fixed[t].sum(axis=1) == 0)
+                & (packed.leaf_probs[t].sum(axis=1) == 0)
+            )
+            n = N
+            while n > 1 and pad[n - 1]:
+                n -= 1
+            counts[t] = n
+        offsets = np.zeros(T + 1, np.int64)
+        np.cumsum(counts, out=offsets[1:])
+        take = np.concatenate(
+            [t * N + np.arange(counts[t]) for t in range(T)]
+        ).astype(np.int64)
+        flat = lambda a: a.reshape(T * N, *a.shape[2:])[take]
+        feature, left, right = (flat(packed.feature), flat(packed.left),
+                                flat(packed.right))
+        depths = np.asarray(
+            [
+                tree_depth_from_arrays(
+                    feature[offsets[t]:offsets[t + 1]],
+                    left[offsets[t]:offsets[t + 1]],
+                    right[offsets[t]:offsets[t + 1]],
+                )
+                for t in range(T)
+            ],
+            np.int32,
+        )
+        return cls(
+            feature=feature,
+            threshold=flat(packed.threshold),
+            threshold_key=flat(packed.threshold_key),
+            left=left,
+            right=right,
+            leaf_probs=flat(packed.leaf_probs).astype(np.float64),
+            leaf_fixed=flat(packed.leaf_fixed),
+            node_offsets=offsets,
+            tree_depths=depths,
+            n_trees=packed.n_trees,
+            n_classes=packed.n_classes,
+            n_features=packed.n_features,
+        )
+
+    # ------------------------------------------------------- materialization
+    def materialize(self, layout: str = "padded"):
+        """The concrete artifact for one registered layout, memoized per IR."""
+        if layout not in self._layouts:
+            from repro.ir.layouts import materialize
+
+            self._layouts[layout] = materialize(self, layout)
+        return self._layouts[layout]
+
+    def materialized_layouts(self) -> tuple:
+        """Names of layouts already built for this IR (no side effects)."""
+        return tuple(sorted(self._layouts))
+
+    def nbytes_by_layout(self, mode: str = "integer") -> dict:
+        """Deployment-artifact bytes of every registered layout.
+
+        The padded node tables cost ``O(T * max(n_nodes))`` regardless of how
+        depth-skewed the forest is; ``ragged`` costs ``O(sum(n_nodes))`` — this
+        is the size axis the bench report breaks out per layout.
+        """
+        from repro.ir.layouts import available_layouts
+
+        fn = "nbytes_integer" if mode == "integer" else "nbytes_float"
+        return {
+            name: getattr(self.materialize(name), fn)()
+            for name in available_layouts()
+        }
+
+
+def resolve_artifact(model, layout: str):
+    """Coerce ``model`` (ForestIR or a layout artifact) into ``layout``.
+
+    An artifact already in the requested layout passes through untouched (so
+    existing ``pack_forest``-then-``TreeEngine`` code never pays a rebuild);
+    anything else resolves through the canonical IR — the artifact's back
+    reference when it has one, else :meth:`ForestIR.from_packed`.
+    """
+    if isinstance(model, ForestIR):
+        return model.materialize(layout)
+    current = getattr(model, "layout", "padded")
+    if current == layout:
+        return model
+    ir = getattr(model, "ir", None)
+    if ir is None:
+        if not hasattr(model, "to_ir"):
+            raise ValueError(
+                f"cannot rematerialize a {type(model).__name__!r} artifact "
+                f"(layout {current!r}) as {layout!r}: no IR back-reference"
+            )
+        ir = model.to_ir()
+    return ir.materialize(layout)

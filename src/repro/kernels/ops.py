@@ -2,7 +2,13 @@
 
 Handles padding (batch to ``block_b`` multiples, trees to ``block_t``
 multiples with inert self-looping zero-probability trees), VMEM budgeting,
-and exposes a PackedEnsemble-level entry point.
+and exposes an ensemble-level entry point.
+
+Layout contract (ForestIR): the kernel consumes dense ``(T, N)`` node tables
+— the IR's ``padded`` or ``leaf_major`` materializations (the paper's codegen
+step re-targeted at tensors).  ``packed_predict_integer`` accepts a
+``ForestIR`` directly and materializes ``padded``; the ``ragged`` layout has
+no VMEM-tileable shape and belongs to the table-walk C backend instead.
 """
 from __future__ import annotations
 
@@ -13,7 +19,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.flint import float_to_key
-from repro.core.packing import PackedEnsemble
 from repro.kernels.tree_traverse import tree_traverse_pallas
 
 _VMEM_BUDGET_BYTES = 8 * 1024 * 1024  # stay well under ~16 MiB v5e VMEM
@@ -83,8 +88,20 @@ def tree_predict_integer(
     return out[:b]
 
 
-def packed_predict_integer(packed: PackedEnsemble, X, **kw):
-    """PackedEnsemble entry point: float features in, (scores, preds) out."""
+def packed_predict_integer(packed, X, **kw):
+    """Node-table entry point: float features in, (scores, preds) out.
+
+    ``packed``: a node-table artifact (``PackedEnsemble`` in ``padded`` or
+    ``leaf_major`` layout) or a ``ForestIR`` (materialized as ``padded``).
+    """
+    if hasattr(packed, "materialize"):  # a ForestIR: take the kernel's layout
+        packed = packed.materialize("padded")
+    layout = getattr(packed, "layout", "padded")
+    if layout not in ("padded", "leaf_major"):
+        raise ValueError(
+            f"the Pallas kernel walks (T, N) node tables, not the {layout!r} "
+            "layout; ragged belongs to the table-walk C backend"
+        )
     keys = float_to_key(jnp.asarray(X, jnp.float32))
     acc = tree_predict_integer(
         keys,

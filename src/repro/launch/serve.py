@@ -1,11 +1,12 @@
 """Runnable serving driver.
 
 Three modes, matching the paper's end-to-end story adapted to a serving stack:
-  * ``--trees``: train an RF on a synthetic Shuttle-like dataset, convert to
-    the integer-only packed form, and serve batched predictions through the
-    three modes (float / flint / integer) and every execution backend
-    (reference jnp, Pallas kernel, compiled native C), reporting agreement
-    and latency — the InTreeger pipeline as a service.
+  * ``--trees``: train an RF on a synthetic Shuttle-like dataset, quantize it
+    into the ForestIR, and serve batched predictions through the three modes
+    (float / flint / integer), every execution backend (reference jnp, Pallas
+    kernel, if-else C, table-walk C) and multiple ForestIR layouts (padded /
+    leaf_major / ragged), reporting agreement and latency — the InTreeger
+    pipeline as a service.
   * ``--trees --gateway``: the async serving gateway end-to-end.  Trains
     several forests, registers them in a versioned ``ModelRegistry`` (one via
     the trees/io JSON artifact boundary), then replays a simulated-client
@@ -54,12 +55,18 @@ def serve_trees(args):
         f"(float: {packed.nbytes_float()/1e3:.1f} kB)"
     )
     engines = {m: TreeEngine(packed, mode=m) for m in ("float", "flint", "integer")}
+    engines["integer-leafmajor"] = TreeEngine(packed, mode="integer",
+                                              layout="leaf_major")
     engines["integer-pallas"] = TreeEngine(packed, mode="integer", backend="pallas")
     if have_c_toolchain():
         engines["integer-native-c"] = TreeEngine(packed, mode="integer",
                                                  backend="native_c")
+        # the table-walk C backend resolves the ragged ForestIR layout
+        # through packed.ir — same model, fourth execution strategy
+        engines["integer-c-table"] = TreeEngine(packed, mode="integer",
+                                                backend="native_c_table")
     else:
-        print("gcc not found: skipping the native_c backend row")
+        print("gcc not found: skipping the native_c / native_c_table rows")
     ref = None
     for name, eng in engines.items():
         eng.predict(Xte[:128])  # warmup/compile
@@ -166,6 +173,7 @@ def serve_gateway(args):
         registry,
         mode=args.gw_mode,
         backend=args.gw_backend,
+        layout=args.gw_layout,
         max_batch_rows=args.gw_batch_rows,
         max_delay_ms=args.gw_max_delay_ms,
         max_queue_rows=args.gw_queue_rows,
@@ -174,9 +182,9 @@ def serve_gateway(args):
     # warm every (model, bucket) pair so compiles don't pollute latency stats
     t0 = time.time()
     for mid in registry.ids():
-        registry.get(mid).engine(args.gw_mode, backend=args.gw_backend).warm(
-            args.gw_batch_rows
-        )
+        registry.get(mid).engine(
+            args.gw_mode, backend=args.gw_backend, layout=args.gw_layout
+        ).warm(args.gw_batch_rows)
     print(f"warmed shape buckets in {time.time()-t0:.1f}s")
 
     def _do_swap(gw):
@@ -185,7 +193,9 @@ def serve_gateway(args):
             RandomForestClassifier(n_estimators=28, max_depth=6, seed=9).fit(Xtr, ytr),
         )
         # warm the new version too
-        mv.engine(args.gw_mode, backend=args.gw_backend).warm(args.gw_batch_rows)
+        mv.engine(
+            args.gw_mode, backend=args.gw_backend, layout=args.gw_layout
+        ).warm(args.gw_batch_rows)
         print(f"  hot-swapped shuttle-rf -> v{mv.version} under live traffic")
 
     swap_done = []
@@ -214,7 +224,7 @@ def serve_gateway(args):
             X = pools[mid][:48]
             g_scores, g_preds = await gateway.submit(mid, X)
             d_scores, d_preds = registry.get(mid).engine(
-                args.gw_mode, backend=args.gw_backend
+                args.gw_mode, backend=args.gw_backend, layout=args.gw_layout
             ).predict_scores(X)
             ok &= bool((g_scores == d_scores).all() and (g_preds == d_preds).all())
         print(f"gateway == direct engine (bit-identical): {ok}")
@@ -264,6 +274,12 @@ def main(argv=None):
     ap.add_argument("--gw-backend", default="reference",
                     choices=tuple(available_backends()),
                     help="execution backend behind the gateway")
+    from repro.ir import available_layouts
+
+    ap.add_argument("--gw-layout", default=None,
+                    choices=tuple(available_layouts()),
+                    help="ForestIR layout to materialize (default: the "
+                         "backend's preferred layout)")
     ap.add_argument("--arch", default="granite-3-2b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)

@@ -5,8 +5,12 @@
 
 ``TreeEngine``: the paper's serving path — a thin shape-bucketing wrapper
 over any registered :class:`~repro.backends.TreeBackend` (reference jnp,
-Pallas kernel, or the emitted C compiled into a shared library), mirroring
-InTreeger's "one model, any hardware" deployment story.  It is the execution
+Pallas kernel, or either emitted-C flavor compiled into a shared library),
+mirroring InTreeger's "one model, any hardware" deployment story.  The engine
+is also where the ForestIR pipeline (IR -> layout -> backend) is resolved: it
+materializes the layout the backend prefers (or the caller pins) before
+constructing it, so callers hand over a ForestIR or any artifact and never
+deal in layouts unless they want to.  It is the execution
 layer behind the gateway (``repro.serve.gateway``): for backends that compile
 per shape, incoming batches are padded up to a small set of power-of-two row
 buckets so each (model, mode, backend, bucket) compiles exactly once, no
@@ -68,9 +72,14 @@ def bucket_rows(b: int, *, max_bucket: int = 4096) -> int:
 class TreeEngine:
     """Shape-bucketing wrapper over one :class:`~repro.backends.TreeBackend`.
 
-    ``backend`` is either a registered backend name (``"reference"``,
-    ``"pallas"``, ``"native_c"``) or an already-constructed backend instance
-    (then ``packed``/``mode`` are taken from it).  ``predict``/
+    ``packed`` is a :class:`~repro.ir.ForestIR` or any materialized layout
+    artifact; ``backend`` is either a registered backend name
+    (``"reference"``, ``"pallas"``, ``"native_c"``, ``"native_c_table"``) or
+    an already-constructed backend instance (then ``packed``/``mode`` are
+    taken from it).  ``layout`` pins a ForestIR layout; by default the
+    backend's declared ``preferred_layout`` is materialized (resolution goes
+    through the artifact's IR back-reference, so a ``pack_forest`` output can
+    feed a ragged-only backend without re-quantizing).  ``predict``/
     ``predict_scores`` accept any row count; for shape-compiling backends the
     batch is padded to a :func:`bucket_rows` bucket so each bucket compiles
     once (tracked in ``compiled_buckets``).  ``max_bucket`` defaults to the
@@ -80,14 +89,25 @@ class TreeEngine:
 
     def __init__(self, packed=None, *, mode: str = "integer",
                  backend="reference", backend_kwargs: Optional[dict] = None,
-                 max_bucket: Optional[int] = None):
-        from repro.backends import create_backend
+                 max_bucket: Optional[int] = None, layout: Optional[str] = None):
+        from repro.backends import backend_class, create_backend
+        from repro.ir import resolve_artifact
 
         if isinstance(backend, str):
+            caps = backend_class(backend).capabilities
+            wanted = layout or caps.preferred_layout
+            caps.require_layout(wanted, backend)
             self.backend = create_backend(
-                backend, packed, mode=mode, **(backend_kwargs or {})
+                backend, resolve_artifact(packed, wanted), mode=mode,
+                **(backend_kwargs or {})
             )
         else:
+            if layout is not None and getattr(backend, "layout", "padded") != layout:
+                raise ValueError(
+                    f"layout {layout!r} conflicts with the constructed "
+                    f"backend's artifact (layout {backend.layout!r}); "
+                    "materialize the backend on the wanted layout instead"
+                )
             self.backend = backend
         self.packed = self.backend.packed
         self.mode = self.backend.mode
@@ -98,6 +118,11 @@ class TreeEngine:
     @property
     def backend_name(self) -> str:
         return self.backend.name
+
+    @property
+    def layout(self) -> str:
+        """The ForestIR layout the backend is walking."""
+        return self.backend.layout
 
     @property
     def deterministic(self) -> bool:

@@ -5,15 +5,19 @@ first probes the :class:`QuantizedKeyCache` (exact FlInt-key match — safe
 because the flint/integer engines are bit-deterministic); rows that miss are
 coalesced by the :class:`MicroBatcher` into block-shaped batches and executed
 on the :class:`TreeEngine` of the model's *current* registry version for the
-gateway's configured ``backend`` (reference / pallas / native_c — all
+gateway's configured ``backend`` and ForestIR ``layout`` (reference / pallas /
+native_c / native_c_table, over padded / ragged / leaf_major — all
 bit-identical in the deterministic modes, so cache entries stay keyed on
-(model, version, mode) only), then inserted into the cache.  The response stitches cached and computed rows back
+(model, version, mode) only and are shared across every route), then inserted
+into the cache.  The response stitches cached and computed rows back
 into request order, so callers always see exactly what a direct
 ``TreeEngine.predict_scores`` on their rows would return, bit for bit.
 
 Metrics (per-model latency percentiles, throughput, batch occupancy, cache
-hit rate, admission rejects) are recorded on every request and surfaced via
-``Gateway.stats()`` / ``Gateway.render_table()``.
+hit rate, admission rejects) are recorded on every request — including
+requests served entirely from cache, which count into the latency histogram
+and the ``hit_requests`` counter — and surfaced via ``Gateway.stats()`` /
+``Gateway.render_table()``.
 """
 from __future__ import annotations
 
@@ -30,12 +34,14 @@ from repro.serve.registry import ModelRegistry
 
 class Gateway:
     def __init__(self, registry: ModelRegistry, *, mode: str = "integer",
-                 backend: str = "reference", max_batch_rows: int = 256,
+                 backend: str = "reference", layout: str = None,
+                 max_batch_rows: int = 256,
                  max_delay_ms: float = 2.0, max_queue_rows: int = 4096,
                  cache_rows: int = 65536):
         self.registry = registry
         self.mode = mode
         self.backend = backend
+        self.layout = layout  # None -> the backend's preferred ForestIR layout
         self.metrics = MetricsRegistry()
         # validate the route up front and let the backend's declared
         # capabilities decide cacheability: the cache is only sound when the
@@ -46,6 +52,11 @@ class Gateway:
                 f"backend {backend!r} does not implement mode {mode!r}; "
                 f"supported modes: {caps.modes}"
             )
+        if layout is not None:
+            caps.require_layout(layout, backend)
+        # cache keys stay (model, version, mode, row-key): deterministic-mode
+        # scores are bit-identical across layouts AND backends, so entries
+        # are shared no matter which route computed them
         self.cache = QuantizedKeyCache(
             cache_rows if mode in caps.deterministic_modes else 0
         )
@@ -61,7 +72,7 @@ class Gateway:
     def _execute(self, model_id: str, X: np.ndarray):
         """Batch executor handed to the MicroBatcher (runs in a thread)."""
         mv = self.registry.get(model_id)  # resolve version at dispatch time
-        eng = mv.engine(self.mode, backend=self.backend)
+        eng = mv.engine(self.mode, backend=self.backend, layout=self.layout)
         scores, preds = eng.predict_scores(X)
         # meta = the version that actually computed, so cache fills are keyed
         # consistently even when a hot-swap lands between submit and dispatch
@@ -91,33 +102,45 @@ class Gateway:
             mm.record_cache(len(cached), n - len(cached))
 
         miss_idx = [i for i in range(n) if i not in cached]
-        if miss_idx:
-            try:
+        if not miss_idx:
+            # served entirely from cache: skip the batcher, count the request
+            # into hit_requests, and record latency like any other request —
+            # a gateway that timed only its misses would report p50/p95 far
+            # worse than what a high-hit-rate client stream experiences.
+            scores, preds = self._stitch(n, cached, [], None, None)
+            mm.hit_requests += 1
+            mm.record_request(n, (time.perf_counter() - t0) * 1e3)
+            return scores, preds
+        try:
+            m_scores, m_preds, served_version = await self.batcher.submit(
+                model_id, X[miss_idx]
+            )
+            if cached and served_version != mv.version:
+                # a hot-swap landed between the cache probe and dispatch:
+                # the hits are from the old version.  Recompute the whole
+                # request in ONE batcher call — a single execute runs on a
+                # single version, so the response cannot mix versions.
+                cached = {}
+                miss_idx = list(range(n))
                 m_scores, m_preds, served_version = await self.batcher.submit(
-                    model_id, X[miss_idx]
+                    model_id, X
                 )
-                if cached and served_version != mv.version:
-                    # a hot-swap landed between the cache probe and dispatch:
-                    # the hits are from the old version.  Recompute the whole
-                    # request in ONE batcher call — a single execute runs on a
-                    # single version, so the response cannot mix versions.
-                    cached = {}
-                    miss_idx = list(range(n))
-                    m_scores, m_preds, served_version = await self.batcher.submit(
-                        model_id, X
-                    )
-            except AdmissionError:
-                mm.rejected += 1
-                raise
-            if cacheable:
-                for j, i in enumerate(miss_idx):
-                    self.cache.put(
-                        self.cache.key_for(model_id, served_version, self.mode, keys[i]),
-                        m_scores[j], m_preds[j],
-                    )
-        else:
-            m_scores = m_preds = None
+        except AdmissionError:
+            mm.rejected += 1
+            raise
+        if cacheable:
+            for j, i in enumerate(miss_idx):
+                self.cache.put(
+                    self.cache.key_for(model_id, served_version, self.mode, keys[i]),
+                    m_scores[j], m_preds[j],
+                )
+        scores, preds = self._stitch(n, cached, miss_idx, m_scores, m_preds)
+        mm.record_request(n, (time.perf_counter() - t0) * 1e3)
+        return scores, preds
 
+    @staticmethod
+    def _stitch(n, cached, miss_idx, m_scores, m_preds):
+        """Reassemble cached and computed rows into request order."""
         # shape/dtype from the results themselves: after a mid-request
         # hot-swap the serving version's class count may differ from mv's
         proto = m_scores[0] if m_scores is not None else next(iter(cached.values()))[0]
@@ -129,8 +152,6 @@ class Gateway:
         for j, i in enumerate(miss_idx):
             scores[i] = m_scores[j]
             preds[i] = m_preds[j]
-
-        mm.record_request(n, (time.perf_counter() - t0) * 1e3)
         return scores, preds
 
     # ------------------------------------------------------------- control

@@ -20,6 +20,7 @@ _RESERVOIR = 100_000  # latency samples kept per model
 @dataclass
 class ModelMetrics:
     requests: int = 0
+    hit_requests: int = 0  # requests served entirely from the response cache
     rows: int = 0
     rejected: int = 0
     batches: int = 0
@@ -57,6 +58,10 @@ class ModelMetrics:
         probed = self.cache_hits + self.cache_misses
         return {
             "requests": self.requests,
+            # fully-cached requests: they flow through the same latency
+            # histogram (a hit still costs key hashing + stitch), this just
+            # makes their share observable
+            "hit_requests": self.hit_requests,
             "rows": self.rows,
             "rejected": self.rejected,
             # a single request gives no usable time span; report 0, not a

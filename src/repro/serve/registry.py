@@ -9,9 +9,11 @@ Each ``register_*`` call creates a new immutable :class:`ModelVersion` and
 atomically repoints the model id at it (hot-swap).  In-flight batches formed
 against the previous version keep their reference and finish on it; new
 requests route to the new version.  Engines are built lazily per (version,
-mode, backend) and memoized, so a registry fronts every (mode, backend)
-combination — reference jnp, Pallas kernel, compiled native C — with one
-compile set per version.
+mode, backend, layout) and memoized, so a registry fronts every route —
+reference jnp, Pallas kernel, either compiled-C flavor, over any ForestIR
+layout the backend walks — with one compile set per version.  The version's
+padded tables carry the canonical IR, so every layout materializes from one
+quantization.
 """
 from __future__ import annotations
 
@@ -33,17 +35,23 @@ class ModelVersion:
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
 
     def engine(self, mode: str = "integer", *, backend: str = "reference",
-               backend_kwargs: dict = None) -> TreeEngine:
-        """The memoized TreeEngine for one (mode, backend) route.
+               layout: str = None, backend_kwargs: dict = None) -> TreeEngine:
+        """The memoized TreeEngine for one (mode, backend, layout) route.
 
-        ``backend_kwargs`` only apply on the call that first builds the
-        engine; later lookups for the same (mode, backend) return it as-is.
+        ``layout=None`` resolves to the backend's ``preferred_layout`` (and
+        memoizes under the resolved name, so a later explicit request for
+        that layout reuses the same engine).  ``backend_kwargs`` only apply
+        on the call that first builds the engine; later lookups for the same
+        route return it as-is.
         """
-        key = (mode, backend)
+        from repro.backends import backend_class
+
+        resolved = layout or backend_class(backend).capabilities.preferred_layout
+        key = (mode, backend, resolved)
         with self._lock:
             if key not in self._engines:
                 self._engines[key] = TreeEngine(
-                    self.packed, mode=mode, backend=backend,
+                    self.packed, mode=mode, backend=backend, layout=resolved,
                     backend_kwargs=backend_kwargs,
                 )
             return self._engines[key]
@@ -89,8 +97,9 @@ class ModelRegistry:
         return sorted(self._models)
 
     def describe(self) -> dict:
-        return {
-            mid: {
+        out = {}
+        for mid, mv in sorted(self._models.items()):
+            d = {
                 "version": mv.version,
                 "source": mv.source,
                 "n_trees": mv.packed.n_trees,
@@ -98,5 +107,13 @@ class ModelRegistry:
                 "n_features": mv.packed.n_features,
                 "artifact_kb": mv.packed.nbytes_integer() / 1e3,
             }
-            for mid, mv in sorted(self._models.items())
-        }
+            # bytes per layout, for the layouts serving routes have actually
+            # materialized (reporting must not force builds of the others)
+            ir = getattr(mv.packed, "ir", None)
+            if ir is not None:
+                d["layout_kb"] = {
+                    name: ir.materialize(name).nbytes_integer() / 1e3
+                    for name in ir.materialized_layouts()
+                }
+            out[mid] = d
+        return out

@@ -1,11 +1,14 @@
-"""Cross-backend conformance: the backend layer's anchor suite.
+"""Cross-(backend, layout) conformance: the IR/backend layers' anchor suite.
 
 InTreeger's claim — one trained ensemble, bit-identical integer-only
 inference on any hardware — becomes testable through the TreeBackend
-protocol: for the deterministic modes (flint/integer), every registered
-backend must produce *bit-identical* scores and predictions on randomized
-forests.  Plus: registry lookup/error behavior, capability validation,
-TreeEngine bucketing edge cases, and the deep-tree C emitter guard.
+protocol and the ForestIR layout layer: for the deterministic modes
+(flint/integer), every registered backend must produce *bit-identical*
+scores and predictions on randomized forests, through every ForestIR layout
+it declares (padded / ragged / leaf_major), including degenerate forests
+(single-node stumps, T == 1, strongly depth-skewed).  Plus: registry
+lookup/error behavior, capability/layout validation, TreeEngine bucketing
+edge cases, and the deep-tree C emitter guard.
 
 Run standalone via ``make conformance``.
 """
@@ -19,7 +22,15 @@ from repro.backends import (
     backend_class,
     create_backend,
 )
+from repro.ir import ForestIR
 from repro.serve.engine import TreeEngine, bucket_rows
+
+ALL_BACKENDS = [
+    "reference",
+    "pallas",
+    pytest.param("native_c", marks=pytest.mark.requires_gcc),
+    pytest.param("native_c_table", marks=pytest.mark.requires_gcc),
+]
 
 
 @pytest.fixture(scope="module", params=[(3, 7, 5), (11, 16, 7)],
@@ -46,8 +57,10 @@ def _scores(backend, rows):
 
 # ------------------------------------------------------------------ registry
 
-def test_registry_has_all_three_backends():
-    assert {"reference", "pallas", "native_c"} <= set(available_backends())
+def test_registry_has_all_four_backends():
+    assert {"reference", "pallas", "native_c", "native_c_table"} <= set(
+        available_backends()
+    )
 
 
 def test_registry_unknown_name_lists_available(small_packed):
@@ -68,11 +81,39 @@ def test_capability_flags():
     ref = backend_class("reference").capabilities
     nat = backend_class("native_c").capabilities
     pal = backend_class("pallas").capabilities
+    tbl = backend_class("native_c_table").capabilities
     assert set(ref.modes) == {"float", "flint", "integer"}
     assert ref.deterministic_modes == ("flint", "integer")
     assert ref.compiles_per_shape and pal.compiles_per_shape
     assert not nat.compiles_per_shape  # the C loop takes any row count
     assert pal.preferred_block_rows == 256  # aligns buckets with kernel tiles
+    # layout axis: node-table backends walk both (T, N) orderings; the
+    # table-walk C backend is the ragged layout's consumer
+    for caps in (ref, pal, nat):
+        assert set(caps.supported_layouts) == {"padded", "leaf_major"}
+        assert caps.preferred_layout == "padded"
+    assert tbl.supported_layouts == ("ragged",)
+    assert tbl.preferred_layout == "ragged"
+    assert set(tbl.modes) == {"flint", "integer"}  # integer-compare modes only
+    assert not tbl.compiles_per_shape
+
+
+def test_backend_rejects_unsupported_layout(small_packed):
+    ragged = small_packed.to_ir().materialize("ragged")
+    with pytest.raises(ValueError, match="layout"):
+        create_backend("pallas", ragged, mode="integer")
+    with pytest.raises(ValueError, match="layout"):
+        create_backend("native_c_table", small_packed, mode="integer")
+    with pytest.raises(ValueError, match="layout"):
+        TreeEngine(small_packed, mode="integer", backend="reference",
+                   layout="ragged")
+    # a pre-constructed backend instance cannot satisfy a conflicting pin —
+    # silently serving its existing artifact would ignore the request
+    from repro.backends import ReferenceBackend
+
+    with pytest.raises(ValueError, match="conflicts"):
+        TreeEngine(backend=ReferenceBackend(small_packed, "integer"),
+                   layout="leaf_major")
 
 
 # --------------------------------------------------- cross-backend identity
@@ -140,6 +181,134 @@ def test_gateway_serves_same_model_through_every_backend(small_forest, shuttle_s
     mv = reg.get("m")
     assert mv.engine("integer", backend="pallas") is mv.engine("integer", backend="pallas")
     assert mv.engine("integer", backend="pallas") is not mv.engine("integer")
+
+
+# ----------------------------------------------- cross-layout conformance
+
+def _forest_from_trees(trees, n_classes, n_features):
+    from repro.trees.forest import RandomForestClassifier
+
+    f = RandomForestClassifier(n_estimators=len(trees))
+    f.trees_ = trees
+    f.n_classes_ = n_classes
+    f.n_features_ = n_features
+    return f
+
+
+def _stump(probs):
+    """A single-node tree: the root IS the leaf (n_nodes == 1, depth 0)."""
+    from repro.trees.cart import TreeArrays
+
+    return TreeArrays(
+        feature=np.array([-1], np.int32),
+        threshold=np.zeros(1, np.float32),
+        left=np.zeros(1, np.int32),
+        right=np.zeros(1, np.int32),
+        leaf_probs=np.asarray([probs], np.float64),
+        depth=0,
+    )
+
+
+def _chain_tree(depth, n_classes):
+    """A right-leaning chain: node 2k internal on feature 0, node 2k+1 its
+    left leaf, final node the rightmost leaf — maximal depth skew."""
+    from repro.trees.cart import TreeArrays
+
+    n = 2 * depth + 1
+    feature = np.full(n, -1, np.int32)
+    threshold = np.zeros(n, np.float32)
+    left = np.arange(n, dtype=np.int32)
+    right = left.copy()
+    probs = np.zeros((n, n_classes), np.float64)
+    for k in range(depth):
+        node = 2 * k
+        feature[node] = 0
+        threshold[node] = float(k) - depth / 2.0
+        left[node] = node + 1
+        right[node] = node + 2
+        probs[node + 1, k % n_classes] = 1.0
+    probs[n - 1, (depth + 1) % n_classes] = 1.0
+    return TreeArrays(feature=feature, threshold=threshold, left=left,
+                      right=right, leaf_probs=probs, depth=depth)
+
+
+_DEGENERATE = {
+    # every tree is a single-node stump (n_nodes == 1, max_depth == 0)
+    "stumps": lambda: _forest_from_trees(
+        [_stump([1.0, 0.0, 0.0]), _stump([0.0, 0.5, 0.5]),
+         _stump([0.25, 0.25, 0.5])], 3, 4),
+    # a forest of exactly one (non-trivial) tree
+    "single_tree": lambda: _forest_from_trees([_chain_tree(3, 3)], 3, 4),
+    # one deep chain among stumps: ragged's O(sum nodes) vs padded's
+    # O(T * max nodes) worst case, plus mixed per-tree depths in one walk
+    "depth_skewed": lambda: _forest_from_trees(
+        [_chain_tree(11, 3), _stump([0.0, 1.0, 0.0]), _stump([0.6, 0.2, 0.2])],
+        3, 4),
+}
+
+
+@pytest.fixture(scope="module", params=sorted(_DEGENERATE), ids=sorted(_DEGENERATE))
+def degenerate_case(request):
+    """(ForestIR, probe rows) for one degenerate forest shape."""
+    forest = _DEGENERATE[request.param]()
+    ir = ForestIR.from_forest(forest)
+    rng = np.random.default_rng(hash(request.param) % 2**32)
+    rows = rng.normal(0.0, 6.0, (33, ir.n_features)).astype(np.float32)
+    return ir, rows
+
+
+def _layout_mode_pairs(backend):
+    caps = backend_class(backend).capabilities
+    return [(lay, mode) for lay in caps.supported_layouts
+            for mode in caps.deterministic_modes]
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_cross_layout_bit_identity_randomized(random_case, backend):
+    """The acceptance property: flint/integer scores bit-identical across
+    every (layout, backend) pair the backend declares, randomized forests."""
+    packed, rows = random_case
+    ir = packed.to_ir()
+    ref = {}  # one reference run per mode; layouts reuse it
+    for layout, mode in _layout_mode_pairs(backend):
+        if mode not in ref:
+            ref[mode] = _scores(create_backend("reference", packed, mode=mode), rows)
+        s_ref, p_ref = ref[mode]
+        eng = TreeEngine(ir, mode=mode, backend=backend, layout=layout)
+        s, p = eng.predict_scores(rows)
+        assert eng.layout == layout
+        np.testing.assert_array_equal(np.asarray(s), s_ref,
+                                      err_msg=f"{backend}/{layout}/{mode}")
+        np.testing.assert_array_equal(np.asarray(p), p_ref,
+                                      err_msg=f"{backend}/{layout}/{mode}")
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_cross_layout_bit_identity_degenerate(degenerate_case, backend):
+    """Stumps, T == 1, and depth-skewed forests through every (layout, mode)
+    pair of every backend — the packing edge cases padding used to hide."""
+    ir, rows = degenerate_case
+    ref = {}
+    for layout, mode in _layout_mode_pairs(backend):
+        if mode not in ref:
+            ref[mode] = _scores(
+                create_backend("reference", ir.materialize("padded"), mode=mode),
+                rows,
+            )
+        s_ref, p_ref = ref[mode]
+        eng = TreeEngine(ir, mode=mode, backend=backend, layout=layout)
+        s, p = eng.predict_scores(rows)
+        np.testing.assert_array_equal(np.asarray(s), s_ref,
+                                      err_msg=f"{backend}/{layout}/{mode}")
+        np.testing.assert_array_equal(np.asarray(p), p_ref,
+                                      err_msg=f"{backend}/{layout}/{mode}")
+
+
+def test_degenerate_ragged_has_no_padding_waste(degenerate_case):
+    ir, _ = degenerate_case
+    sizes = ir.nbytes_by_layout(mode="integer")
+    if ir.max_nodes > int(ir.node_counts.min()):
+        assert sizes["ragged"] < sizes["padded"]
 
 
 # -------------------------------------------------------- engine bucketing

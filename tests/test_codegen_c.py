@@ -93,6 +93,56 @@ def test_emit_deep_tree_beyond_recursion_limit():
     assert src.count("if (data[") == depth  # one branch per chain level
 
 
+def test_emit_table_walk_c_structure(small_packed):
+    """The data-as-arrays emitter: static node arrays + one generic walk,
+    integer-only in integer mode, code size O(1) in forest size."""
+    from repro.codegen.table_emitter import emit_table_walk_c
+
+    rg = small_packed.to_ir().materialize("ragged")
+    src = emit_table_walk_c(rg, mode="integer")
+    assert "#include <stdint.h>" in src
+    assert "float" not in src  # integer-only: no float type anywhere
+    for name in ("node_feature", "node_key", "node_left", "node_right",
+                 "node_leaf", "tree_root"):
+        assert f"static const" in src and name in src
+    assert f"tree_root[{rg.n_trees}]" in src
+    assert src.count("while (f >= 0)") == 1  # ONE walk loop, not per-tree code
+    assert src.count("if (") <= 1  # no if-else cascade (argmax only)
+    flint = emit_table_walk_c(rg, mode="flint")
+    assert "float result" in flint or "float* result" in flint
+    with pytest.raises(AssertionError):
+        emit_table_walk_c(rg, mode="float")
+
+
+@pytest.mark.requires_gcc
+def test_compiled_table_walk_matches_if_else(small_packed, shuttle_small):
+    """Both C strategies — forest-as-code (if-else) and forest-as-data
+    (table walk) — must agree bit-for-bit through the shared harness."""
+    from repro.codegen.table_emitter import emit_table_walk_c
+
+    _, _, Xte, _ = shuttle_small
+    Xte = Xte[:300]
+    rg = small_packed.to_ir().materialize("ragged")
+    preds = {}
+    for tag, src in (
+        ("if_else", emit_c(small_packed, mode="integer")),
+        ("table", emit_table_walk_c(rg, mode="integer")),
+    ):
+        full = src + emit_test_harness(small_packed, len(Xte), mode="integer")
+        with tempfile.TemporaryDirectory() as d:
+            c_file, binary = Path(d) / "m.c", Path(d) / "m"
+            c_file.write_text(full)
+            subprocess.run(["gcc", "-O2", "-o", str(binary), str(c_file)],
+                           check=True, capture_output=True)
+            keys = float_to_key_np(Xte.astype(np.float32))
+            out = subprocess.run([str(binary)], input=keys.astype("<i4").tobytes(),
+                                 capture_output=True, check=True)
+        preds[tag] = np.array([int(v) for v in out.stdout.split()])
+    np.testing.assert_array_equal(preds["if_else"], preds["table"])
+    _, jax_preds = predict_integer(small_packed, Xte)
+    np.testing.assert_array_equal(preds["table"], np.asarray(jax_preds))
+
+
 @pytest.mark.requires_gcc
 def test_compiled_c_matches_jax(small_packed, shuttle_small):
     _, _, Xte, _ = shuttle_small

@@ -1,0 +1,144 @@
+"""ForestIR layer: canonical-IR invariants, layout materializations, and
+bit-exact equivalence between the IR-derived padded tables and the historical
+``pack_forest`` packing algorithm."""
+import numpy as np
+import pytest
+
+from repro.core.fixedpoint import prob_to_fixed_np
+from repro.core.flint import float_to_key_np
+from repro.core.packing import PackedEnsemble, pack_forest
+from repro.ir import ForestIR, available_layouts, resolve_artifact
+
+
+def test_layout_registry_contents():
+    assert {"padded", "ragged", "leaf_major"} <= set(available_layouts())
+
+
+def test_ir_shapes_and_offsets(small_forest):
+    ir = ForestIR.from_forest(small_forest)
+    total = ir.total_nodes
+    assert ir.node_offsets.shape == (ir.n_trees + 1,)
+    assert ir.node_offsets[0] == 0 and ir.node_offsets[-1] == total
+    assert (ir.node_counts == [t.n_nodes for t in small_forest.trees_]).all()
+    assert (ir.tree_depths == [t.depth for t in small_forest.trees_]).all()
+    for arr in (ir.feature, ir.threshold, ir.threshold_key, ir.left, ir.right):
+        assert arr.shape == (total,)
+    assert ir.leaf_probs.shape == (total, ir.n_classes)
+    assert ir.leaf_fixed.shape == (total, ir.n_classes)
+    # quantization happened exactly once, in the IR
+    np.testing.assert_array_equal(ir.threshold_key, float_to_key_np(ir.threshold))
+    np.testing.assert_array_equal(ir.leaf_fixed,
+                                  prob_to_fixed_np(ir.leaf_probs, ir.n_trees))
+
+
+def test_padded_materialization_matches_seed_packing(small_forest):
+    """The padded layout must stay *byte-identical* to the pre-IR packer."""
+    trees = small_forest.trees_
+    T, C = len(trees), small_forest.n_classes_
+    N = max(t.n_nodes for t in trees)
+    feature = np.full((T, N), -1, np.int32)
+    threshold = np.zeros((T, N), np.float32)
+    left = np.tile(np.arange(N, dtype=np.int32), (T, 1))
+    right = left.copy()
+    probs = np.zeros((T, N, C), np.float64)
+    for i, t in enumerate(trees):
+        n = t.n_nodes
+        feature[i, :n] = t.feature
+        threshold[i, :n] = t.threshold
+        left[i, :n] = t.left
+        right[i, :n] = t.right
+        is_leaf = t.feature < 0
+        probs[i, :n][is_leaf] = t.leaf_probs[is_leaf]
+
+    p = pack_forest(small_forest)
+    assert p.layout == "padded" and p.ir is not None
+    np.testing.assert_array_equal(p.feature, feature)
+    np.testing.assert_array_equal(p.threshold, threshold)
+    np.testing.assert_array_equal(p.threshold_key, float_to_key_np(threshold))
+    np.testing.assert_array_equal(p.left, left)
+    np.testing.assert_array_equal(p.right, right)
+    np.testing.assert_array_equal(p.leaf_probs, probs.astype(np.float32))
+    np.testing.assert_array_equal(p.leaf_fixed, prob_to_fixed_np(probs, T))
+    assert p.max_depth == max(t.depth for t in trees)
+
+
+def test_materializations_are_memoized(small_forest):
+    ir = ForestIR.from_forest(small_forest)
+    assert ir.materialize("ragged") is ir.materialize("ragged")
+    assert ir.materialize("padded") is ir.materialize("padded")
+    with pytest.raises(KeyError, match="ragged"):
+        ir.materialize("no-such-layout")
+
+
+def test_ragged_layout_global_children_and_roots(small_packed):
+    ir = small_packed.to_ir()
+    rg = ir.materialize("ragged")
+    assert rg.layout == "ragged"
+    np.testing.assert_array_equal(rg.roots, ir.node_offsets[:-1])
+    for t in range(ir.n_trees):
+        lo, hi = int(ir.node_offsets[t]), int(ir.node_offsets[t + 1])
+        sl = slice(lo, hi)
+        # children stay within the owning tree's global slice
+        assert (rg.left[sl] >= lo).all() and (rg.left[sl] < hi).all()
+        assert (rg.right[sl] >= lo).all() and (rg.right[sl] < hi).all()
+        # leaves self-loop globally
+        leaf = rg.feature[sl] < 0
+        idx = np.arange(lo, hi)
+        assert (rg.left[sl][leaf] == idx[leaf]).all()
+
+
+def test_leaf_major_layout_orders_internal_first(small_packed):
+    lm = resolve_artifact(small_packed, "leaf_major")
+    assert lm.layout == "leaf_major"
+    ir = small_packed.ir
+    for t in range(lm.n_trees):
+        n = int(ir.node_counts[t])
+        feats = lm.feature[t, :n]
+        n_internal = int((feats >= 0).sum())
+        # dense internal prefix, leaves grouped after
+        assert (feats[:n_internal] >= 0).all()
+        assert (feats[n_internal:] < 0).all()
+        # the walk still starts at node 0
+        root_is_internal = (small_packed.feature[t, 0] >= 0)
+        assert (feats[0] >= 0) == root_is_internal
+
+
+def test_from_packed_recovers_ir_exactly(small_forest):
+    ir = ForestIR.from_forest(small_forest)
+    # a bare artifact with no back-reference (the register_packed path)
+    p = ir.materialize("padded")
+    bare = PackedEnsemble(
+        feature=p.feature, threshold=p.threshold, threshold_key=p.threshold_key,
+        left=p.left, right=p.right, leaf_probs=p.leaf_probs,
+        leaf_fixed=p.leaf_fixed, n_trees=p.n_trees, n_classes=p.n_classes,
+        n_features=p.n_features, max_depth=p.max_depth,
+    )
+    ir2 = bare.to_ir()
+    for name in ("feature", "threshold", "threshold_key", "left", "right",
+                 "leaf_fixed", "node_offsets", "tree_depths"):
+        np.testing.assert_array_equal(getattr(ir2, name), getattr(ir, name))
+    assert bare.to_ir() is ir2  # recovered once, then attached
+
+
+def test_nbytes_by_layout(small_packed):
+    ir = small_packed.ir
+    sizes = ir.nbytes_by_layout(mode="integer")
+    assert set(sizes) == set(available_layouts())
+    assert sizes["padded"] == small_packed.nbytes_integer()
+    assert sizes["leaf_major"] == sizes["padded"]  # same (T, N) tables
+    # ragged pays sum(nodes), padded pays T * max(nodes)
+    assert sizes["ragged"] <= sizes["padded"]
+    rg = ir.materialize("ragged")
+    assert sizes["ragged"] == rg.nbytes_integer()
+    assert rg.nbytes_float() > 0
+
+
+def test_resolve_artifact_passthrough_and_errors(small_packed):
+    assert resolve_artifact(small_packed, "padded") is small_packed
+    ir = small_packed.ir
+    assert resolve_artifact(ir, "ragged") is ir.materialize("ragged")
+    rg = ir.materialize("ragged")
+    # artifact -> other layout resolves through the IR back-reference
+    assert resolve_artifact(rg, "padded") is ir.materialize("padded")
+    with pytest.raises(KeyError, match="no-such"):
+        resolve_artifact(small_packed, "no-such-layout")

@@ -229,6 +229,56 @@ def test_gateway_survives_event_loop_reuse(small_forest, shuttle_small):
     np.testing.assert_array_equal(s1, direct.predict_scores(Xte[:4])[0])
 
 
+def test_gateway_cache_hit_requests_record_latency(small_forest, shuttle_small):
+    """Requests served entirely from cache must land in the per-model latency
+    histogram and request counters (and the hit_requests counter) — pinned by
+    test so the all-hit fast path can never silently start timing misses
+    only, which would skew p50/p95 on high-hit-rate streams."""
+    _, _, Xte, _ = shuttle_small
+    reg = ModelRegistry()
+    reg.register_forest("m", small_forest)
+    gw = Gateway(reg, mode="integer", max_delay_ms=1.0)
+
+    async def run():
+        s1, _ = await gw.submit("m", Xte[:6])
+        s2, _ = await gw.submit("m", Xte[:6])  # every row now a cache hit
+        await gw.close()
+        return s1, s2
+
+    s1, s2 = asyncio.run(run())
+    np.testing.assert_array_equal(s1, s2)
+    mm = gw.metrics.model("m")
+    assert mm.hit_requests == 1
+    assert mm.requests == 2
+    assert len(mm.latencies_ms) == 2  # the hit request was timed too
+    st = gw.stats()["per_model"]["m"]
+    assert st["hit_requests"] == 1 and st["requests"] == 2
+    assert np.isfinite(st["p50_ms"]) and np.isfinite(st["p99_ms"])
+
+
+def test_gateway_layout_routing_bit_identical(small_forest, shuttle_small):
+    """A layout-pinned gateway serves bit-identically to the default route,
+    and cache keys stay layout-agnostic (same key space, either fills it)."""
+    _, _, Xte, _ = shuttle_small
+    reg = ModelRegistry()
+    reg.register_forest("m", small_forest)
+    gw_default = Gateway(reg, mode="integer", max_delay_ms=1.0)
+    gw_lm = Gateway(reg, mode="integer", layout="leaf_major", max_delay_ms=1.0)
+
+    async def run(gw):
+        out = await gw.submit("m", Xte[:12])
+        await gw.close()
+        return out
+
+    s_d, p_d = asyncio.run(run(gw_default))
+    s_l, p_l = asyncio.run(run(gw_lm))
+    np.testing.assert_array_equal(s_d, s_l)
+    np.testing.assert_array_equal(p_d, p_l)
+    assert reg.get("m").engine("integer", layout="leaf_major").layout == "leaf_major"
+    with pytest.raises(ValueError, match="layout"):
+        Gateway(reg, mode="integer", backend="pallas", layout="ragged")
+
+
 def test_gateway_float_mode_disables_cache(small_packed):
     reg = ModelRegistry()
     reg.register_packed("m", small_packed)

@@ -59,6 +59,55 @@ def test_forest_json_roundtrip_scores_bit_identical(data):
     np.testing.assert_array_equal(np.asarray(pr1), np.asarray(pr2))
 
 
+def test_json_schema_version_round_trip(data):
+    """Documents carry the schema version; the reader accepts the current
+    version and everything older."""
+    import json
+
+    from repro.trees.io import SCHEMA_VERSION
+
+    Xtr, ytr, Xte, _ = data
+    rf = RandomForestClassifier(n_estimators=3, max_depth=4, seed=11).fit(Xtr, ytr)
+    payload = forest_to_json(rf)
+    assert json.loads(payload)["schema_version"] == SCHEMA_VERSION
+
+    # backward compat: v1-era documents (no version field) still load
+    doc = json.loads(payload)
+    del doc["schema_version"]
+    legacy = forest_from_json(json.dumps(doc))
+    np.testing.assert_array_equal(rf.predict(Xte[:200]), legacy.predict(Xte[:200]))
+
+
+def test_json_forward_compat_ignores_additive_metadata(data):
+    """Additive evolution (e.g. ForestIR layout hints) must not break the
+    reader: unknown document- and tree-level keys are ignored, and the model
+    loads bit-identically."""
+    import json
+
+    Xtr, ytr, Xte, _ = data
+    rf = RandomForestClassifier(n_estimators=4, max_depth=4, seed=12).fit(Xtr, ytr)
+    doc = json.loads(forest_to_json(rf))
+    doc["layout_hints"] = {"preferred": "ragged", "node_counts": [1, 2, 3]}
+    doc["generator"] = "some-future-exporter/9.9"
+    for t in doc["trees"]:
+        t["n_internal"] = 0  # per-tree metadata a newer writer might add
+    restored = forest_from_json(json.dumps(doc))
+    p1, p2 = pack_forest(rf), pack_forest(restored)
+    np.testing.assert_array_equal(p1.threshold_key, p2.threshold_key)
+    np.testing.assert_array_equal(p1.leaf_fixed, p2.leaf_fixed)
+
+
+def test_json_newer_schema_version_refused(data):
+    import json
+
+    Xtr, ytr, _, _ = data
+    rf = RandomForestClassifier(n_estimators=2, max_depth=3, seed=13).fit(Xtr, ytr)
+    doc = json.loads(forest_to_json(rf))
+    doc["schema_version"] = 99
+    with pytest.raises(ValueError, match="schema_version 99"):
+        forest_from_json(json.dumps(doc))
+
+
 def test_forest_json_roundtrip(data):
     Xtr, ytr, Xte, _ = data
     rf = RandomForestClassifier(n_estimators=6, max_depth=5, seed=0).fit(Xtr, ytr)

@@ -35,8 +35,9 @@ def test_serve_driver_trees(capsys):
     main(["--trees", "--rows", "4000", "--n-trees", "8", "--depth", "5", "--reps", "1"])
     out = capsys.readouterr().out
     assert "agree_with_float=1.000000" in out
-    # float (self), flint, integer, pallas — plus native-C when gcc exists
-    expected = 5 if shutil.which("gcc") else 4
+    # float (self), flint, integer, integer-leafmajor, pallas — plus the two
+    # native-C flavors (if-else + table-walk) when gcc exists
+    expected = 7 if shutil.which("gcc") else 5
     assert out.count("agree_with_float=1.000000") == expected
 
 
