@@ -3,14 +3,21 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test conformance check bench serve-trees serve-gateway
+.PHONY: test test-fast conformance check bench bench-smoke ci \
+	serve-trees serve-gateway
 
 # tier-1 verify (see ROADMAP.md)
 test:
 	$(PY) -m pytest -x -q
 
-# cross-(backend, layout) bit-identity suite
-# (reference / pallas / native_c / native_c_table x padded / ragged / leaf_major)
+# tier-1 minus the long end-to-end drivers (the `slow` marker) — what the
+# CI tier-1 job runs; `make check` still runs everything
+test-fast:
+	$(PY) -m pytest -q -m "not slow"
+
+# cross-(backend, layout, variant) bit-identity suite: reference / pallas
+# (gather + leaf_major linear scan) / native_c / native_c_table (block_rows
+# 1/4/8) x padded / ragged / leaf_major
 conformance:
 	$(PY) -m pytest -q tests/test_backends.py
 
@@ -19,6 +26,14 @@ check: test conformance
 
 bench:
 	$(PY) benchmarks/run.py
+
+# tiny-forest bench pass: proves every backend executes and produces the
+# benchmarks/artifacts/bench_results.json artifact CI uploads
+bench-smoke:
+	REPRO_BENCH_TINY=1 $(PY) benchmarks/run.py backend_matrix memory_footprint
+
+# exactly what .github/workflows/ci.yml runs, as one local target
+ci: test-fast conformance bench-smoke
 
 serve-trees:
 	$(PY) -m repro.launch.serve --trees

@@ -16,6 +16,7 @@ absolute TPU projections live in the roofline table (§Roofline).
 from __future__ import annotations
 
 import json
+import os
 import pathlib
 import time
 
@@ -23,6 +24,11 @@ import numpy as np
 
 ART = pathlib.Path(__file__).resolve().parent / "artifacts"
 ROWS = []
+
+# REPRO_BENCH_TINY=1 (the CI bench-smoke job) shrinks datasets/forests so the
+# full pipeline runs in seconds: numbers are still *reported* but only prove
+# every backend executes — perf conclusions need the full-size run.
+TINY = bool(int(os.environ.get("REPRO_BENCH_TINY", "0") or "0"))
 
 
 def emit(name: str, us_per_call: float, derived: str):
@@ -47,8 +53,9 @@ def _time(fn, *args, reps=5, warmup=2):
 def _datasets():
     from repro.data.tabular import make_esa_like, make_shuttle_like, train_test_split
 
-    shuttle = train_test_split(*make_shuttle_like(n=20000, seed=0), seed=0)
-    esa = train_test_split(*make_esa_like(n=20000, seed=0), seed=0)
+    n = 2500 if TINY else 20000
+    shuttle = train_test_split(*make_shuttle_like(n=n, seed=0), seed=0)
+    esa = train_test_split(*make_esa_like(n=n, seed=0), seed=0)
     return {"shuttle": shuttle, "esa": esa}
 
 
@@ -327,44 +334,97 @@ def gateway_vs_naive():
 
 
 def backend_matrix():
-    """Backend axis: one model served through every registered backend at
-    several batch sizes, per-backend ns/row.  ``reference`` and ``pallas``
-    are jitted JAX on the host backend (pallas runs in interpret mode on
-    CPU, so its absolute time is not meaningful — identity is the point);
+    """Backend axis: one model served through every registered backend *and
+    execution variant* at several batch sizes, per-backend ns/row.
+
+    ``reference`` and ``pallas`` are jitted JAX on the host backend (pallas
+    runs in interpret mode on CPU, so its absolute time is not meaningful —
+    identity is the point; the gather-vs-linear-scan comparison is about op
+    structure).  The pallas rows cover both walk strategies: per-depth
+    gathers over ``padded`` tables vs the leaf_major linear scan.
     ``native_c`` is the paper's emitted if-else C and ``native_c_table`` the
-    ragged-layout table-walk C (forest-as-data vs forest-as-code — the
-    architecture comparison the paper's discussion motivates), both compiled
-    -O2 into shared libraries and driven through ctypes.  All integer scores
-    must be bit-identical across backends and layouts (the conformance
-    property the IR/backend layers are anchored on)."""
+    ragged-layout table-walk C, benchmarked scalar (``block_rows=1``) vs
+    row-blocked (``block_rows=8``), all compiled -O2 into shared libraries
+    and driven through ctypes.  All integer scores must be bit-identical
+    across every route (the conformance property the IR/backend layers are
+    anchored on).
+
+    The shuttle forest is small enough to live in cache, which flatters the
+    speculative scalar walk; the ``deep`` rows rerun blocked-vs-scalar on a
+    deeper, harder forest (the regime the row-blocking literature targets),
+    where the blocked walk's branch-free lockstep chains win.
+    """
     from repro.backends import have_c_toolchain
     from repro.serve.engine import TreeEngine
 
-    data = _datasets()["shuttle"]
-    rf, packed, Xte, _ = _forest(data, 16, depth=6)
-    names = ["reference", "pallas"]
-    if have_c_toolchain():
-        names += ["native_c", "native_c_table"]
+    ds = _datasets()
+    rf, packed, Xte, _ = _forest(ds["shuttle"], 4 if TINY else 16,
+                                 depth=4 if TINY else 6)
+    have_gcc = have_c_toolchain()
+    # (route tag, backend, engine kwargs)
+    routes = [
+        ("reference", "reference", {}),
+        ("pallas[gather]", "pallas",
+         {"layout": "padded", "backend_kwargs": {"impl": "gather"}}),
+        ("pallas[leaf_major]", "pallas",
+         {"layout": "leaf_major", "backend_kwargs": {"impl": "leaf_major"}}),
+    ]
+    if have_gcc:
+        routes += [
+            ("native_c", "native_c", {}),
+            ("native_c_table[block_rows=1]", "native_c_table",
+             {"backend_kwargs": {"block_rows": 1}}),
+            ("native_c_table[block_rows=8]", "native_c_table",
+             {"backend_kwargs": {"block_rows": 8}}),
+        ]
     else:
         emit("backend_matrix_native_c", 0,
              "gcc unavailable; native_c + native_c_table skipped")
 
-    probe = Xte[:256]
+    batches = (32, 64) if TINY else (64, 256, 1024)
+    probe = Xte[: batches[-1]]
     ref_scores = None
-    for name in names:
-        eng = TreeEngine(packed, mode="integer", backend=name)
+    for tag, name, kwargs in routes:
+        eng = TreeEngine(packed, mode="integer", backend=name, **kwargs)
         scores, _ = eng.predict_scores(probe)
         if ref_scores is None:
             ref_scores = scores
         else:
-            assert (scores == ref_scores).all(), f"{name} diverged from reference"
-        for batch in (64, 256, 1024):
+            assert (scores == ref_scores).all(), f"{tag} diverged from reference"
+        for batch in batches:
             X = Xte[:batch]
             us = _time(eng.predict_scores, X, reps=3)
             emit(
-                f"backend_{name}_b{batch}", us,
+                f"backend_{tag}_b{batch}", us,
                 f"ns_per_row={us * 1e3 / batch:.1f};layout={eng.layout};"
                 f"buckets={sorted(eng.compiled_buckets)}",
+            )
+
+    if have_gcc:
+        # blocked-vs-scalar where row blocking actually bites: a deep forest
+        # whose walks defeat branch prediction and exceed the fast caches
+        deep = _forest(ds["esa"], 8 if TINY else 60,
+                       depth=6 if TINY else 12)
+        _, dpacked, dXte, _ = deep
+        engs = {
+            br: TreeEngine(dpacked, mode="integer", backend="native_c_table",
+                           backend_kwargs={"block_rows": br})
+            for br in (1, 8)
+        }
+        s1, _ = engs[1].predict_scores(dXte[:64])
+        s8, _ = engs[8].predict_scores(dXte[:64])
+        assert (s1 == s8).all(), "blocked table walk diverged from scalar"
+        for batch in batches:
+            if batch > len(dXte):
+                continue
+            X = dXte[:batch]
+            t_scalar = _time(engs[1].predict_scores, X, reps=3)
+            t_blocked = _time(engs[8].predict_scores, X, reps=3)
+            emit(
+                f"backend_deep_table_blocked_b{batch}", t_blocked,
+                f"ns_per_row={t_blocked * 1e3 / batch:.1f};"
+                f"scalar_ns_per_row={t_scalar * 1e3 / batch:.1f};"
+                f"blocked_speedup={t_scalar / t_blocked:.2f}x",
             )
 
 
@@ -415,10 +475,19 @@ def main(argv=None) -> None:
         raise SystemExit(f"unknown bench(es) {unknown}; have {sorted(by_name)}")
     for fn in [by_name[n] for n in names] or BENCHES:
         fn()
+    ART.mkdir(parents=True, exist_ok=True)
     out = ART / "bench_results.csv"
-    out.parent.mkdir(parents=True, exist_ok=True)
     out.write_text("name,us_per_call,derived\n" + "\n".join(ROWS) + "\n")
-    print(f"# wrote {out}")
+    # machine-readable mirror: the CI bench-smoke job uploads this artifact
+    records = []
+    for row in ROWS:
+        name, us, derived = row.split(",", 2)
+        records.append({"name": name, "us_per_call": float(us), "derived": derived})
+    out_json = ART / "bench_results.json"
+    out_json.write_text(json.dumps(
+        {"tiny": TINY, "results": records}, indent=2
+    ) + "\n")
+    print(f"# wrote {out} and {out_json}")
 
 
 if __name__ == "__main__":

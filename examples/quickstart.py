@@ -54,10 +54,16 @@ from repro.serve.engine import TreeEngine
 eng_padded = TreeEngine(ir, mode="integer")                       # padded
 eng_lm = TreeEngine(ir, mode="integer", layout="leaf_major")      # pinned
 engines = {"reference/padded": eng_padded, "reference/leaf_major": eng_lm}
+# the layout-specialized Pallas route: leaf_major tables + the linear-scan
+# kernel (pallas resolves impl="auto" to the scan on its preferred layout)
+engines["pallas/leaf_major"] = TreeEngine(ir, mode="integer",
+                                          backend="pallas", layout="leaf_major")
 if have_c_toolchain():
-    # table-walk C over the ragged layout (backend's preferred layout)
-    engines["native_c_table/ragged"] = TreeEngine(ir, mode="integer",
-                                                  backend="native_c_table")
+    # table-walk C over the ragged layout, row-blocked: 8 register-resident
+    # walk chains per tree (block_rows=1 would be the scalar walk)
+    engines["native_c_table/ragged"] = TreeEngine(
+        ir, mode="integer", backend="native_c_table",
+        backend_kwargs={"block_rows": 8})
 s_ref, _ = eng_padded.predict_scores(Xte[:256])
 for name, eng in engines.items():
     s, _ = eng.predict_scores(Xte[:256])

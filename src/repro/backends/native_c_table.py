@@ -11,14 +11,24 @@ throughput at batch, now directly measurable via
 ``benchmarks/run.py backend_matrix`` (if-else vs table-walk C, same model,
 several batch sizes).
 
+Row-blocked by default: ``block_rows=R`` (default 8, the capability's
+``preferred_block_rows``) emits a batch entry that walks R rows per tree in
+lockstep through fixed-size state arrays and an exact ``max_depth`` select
+trip count — tree-major memory order, branch-free inner loop, vectorizable.
+``block_rows=1`` keeps the scalar per-row while-loop walk (the baseline the
+blocked variant is benchmarked against in ``backend_matrix``).
+
 Deterministic modes only (integer + flint): thresholds stay FlInt int32 keys,
 so scores are bit-identical to every other backend — the conformance suite
-holds across the layout axis too.
+holds across the layout axis AND every block size, since blocking only
+reorders *which rows* walk when, never any row's own accumulation order.
 """
 from __future__ import annotations
 
 from repro.backends.base import BackendCapabilities, register_backend
 from repro.backends.native_c import CompiledCBackend
+
+_DEFAULT_BLOCK_ROWS = 8
 
 
 @register_backend
@@ -27,16 +37,27 @@ class NativeCTableBackend(CompiledCBackend):
     capabilities = BackendCapabilities(
         modes=("flint", "integer"),
         deterministic_modes=("flint", "integer"),
-        preferred_block_rows=None,
+        preferred_block_rows=_DEFAULT_BLOCK_ROWS,
         compiles_per_shape=False,
         supported_layouts=("ragged",),
         preferred_layout="ragged",
     )
 
+    def __init__(self, packed, mode: str = "integer", *,
+                 block_rows: int = None, **kwargs):
+        super().__init__(packed, mode, **kwargs)
+        self.block_rows = (_DEFAULT_BLOCK_ROWS if block_rows is None
+                           else int(block_rows))
+        if self.block_rows < 1:
+            raise ValueError(f"block_rows must be >= 1, got {block_rows}")
+
     def _emit_source(self) -> str:
         from repro.codegen.c_emitter import emit_batch_entry
         from repro.codegen.table_emitter import emit_table_walk_c
 
-        return emit_table_walk_c(self.packed, mode=self.mode) + emit_batch_entry(
-            self.packed, mode=self.mode
+        if self.block_rows == 1:  # scalar per-row walk, the pre-blocking path
+            return emit_table_walk_c(self.packed, mode=self.mode) + \
+                emit_batch_entry(self.packed, mode=self.mode)
+        return emit_table_walk_c(
+            self.packed, mode=self.mode, block_rows=self.block_rows
         )

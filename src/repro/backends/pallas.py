@@ -5,6 +5,13 @@ decisions: the row/tree block sizes fed to the kernel (VMEM-budgeted via
 ``pick_blocks``) and the ``preferred_block_rows`` hint that makes the serving
 layer pad batches to shapes aligned with the kernel's ``block_b`` tiling.
 
+Layout-specialized: the backend prefers the ``leaf_major`` layout, where the
+linear-scan kernel (``impl="leaf_major"``) walks each tree's internal-node
+prefix front-to-back with compare+select steps — no per-depth node-table
+gathers.  ``impl="auto"`` (the default) resolves per layout: linear scan on
+``leaf_major`` tables, the per-level ``gather`` walk on ``padded`` ones —
+i.e. pinning ``layout="padded"`` falls back to padded+gather untouched.
+
 The kernel implements exactly the paper's integer path (int32 FlInt compares,
 uint32 fixed-point accumulation), so ``modes == ("integer",)``; uint32
 addition is associative mod 2^32, which is why the tiled accumulation is
@@ -28,16 +35,33 @@ class PallasBackend(TreeBackend):
         deterministic_modes=("integer",),
         preferred_block_rows=_DEFAULT_BLOCK_B,
         compiles_per_shape=True,
-        # the kernel consumes dense (T, N) VMEM-resident tables and gathers
-        # by node index, so both node-table orderings are walkable
-        supported_layouts=("padded", "leaf_major"),
-        preferred_layout="padded",
+        # the kernel consumes dense (T, N) VMEM-resident tables, so both
+        # node-table orderings are walkable; leaf_major is preferred because
+        # the linear-scan impl replaces depth-many gathers with one forward
+        # pass over the internal-node prefix
+        supported_layouts=("leaf_major", "padded"),
+        preferred_layout="leaf_major",
     )
 
     def __init__(self, packed: PackedEnsemble, mode: str = "integer", *,
                  block_b: int = _DEFAULT_BLOCK_B, block_t: Optional[int] = None,
-                 impl: str = "gather", interpret: bool = True):
+                 impl: str = "auto", interpret: bool = True):
         super().__init__(packed, mode)
+        scannable = getattr(packed, "internal_counts", None) is not None
+        if impl == "auto":
+            # the linear scan needs the layout's internal prefix AND its
+            # children-after-parents ordering (internal_counts is None when
+            # an imported forest violates it) — otherwise gather-walk the
+            # tables, which any node order satisfies
+            impl = "leaf_major" if self.layout == "leaf_major" and scannable \
+                else "gather"
+        if impl == "leaf_major" and not (self.layout == "leaf_major" and scannable):
+            raise ValueError(
+                "impl='leaf_major' scans the leaf_major internal-node prefix; "
+                f"this backend was materialized on the {self.layout!r} layout"
+                + ("" if scannable else " without a scannable node order")
+            )
+        self.impl = impl
         self._kernel_kwargs = dict(
             block_b=block_b, block_t=block_t, impl=impl, interpret=interpret
         )

@@ -44,6 +44,11 @@ class PackedEnsemble:
     # to the canonical IR so other layouts can be materialized on demand.
     layout: str = "padded"
     node_counts: Optional[np.ndarray] = field(default=None, repr=False)
+    # leaf_major only: per-tree internal-node counts (T,).  In that layout a
+    # tree's nodes are permuted internal-first, so indices [0, internal_counts
+    # [t]) are exactly tree t's split nodes — the prefix the linear-scan
+    # Pallas kernel walks front-to-back instead of gathering per depth level.
+    internal_counts: Optional[np.ndarray] = field(default=None, repr=False)
     ir: Optional[object] = field(default=None, repr=False, compare=False)
 
     @property

@@ -127,18 +127,39 @@ def leaf_major_layout(ir):
     index 0 (the first internal node in BFS order is the root; a single-leaf
     stump has no internal nodes, so its one leaf stays put).  Traversal is
     index-gather-based, so reordering cannot perturb scores.
+
+    Records ``internal_counts`` (T,) — the per-tree internal-prefix length —
+    when the *topological* property the linear-scan kernel
+    (``kernels.tree_traverse.tree_traverse_leaf_major``) relies on holds:
+    within the internal prefix every child sits at a strictly larger index
+    than its parent, so one forward pass over the prefix routes every row
+    from the root to its leaf.  Tree builders append children after their
+    parent and the stable permutation preserves that order, but imported
+    artifacts (``trees/io``) may order nodes arbitrarily — the tables are
+    still valid for every gather-based walker, so such forests materialize
+    fine with ``internal_counts = None`` and the Pallas backend's
+    ``impl="auto"`` falls back to the gather walk instead of the scan.
     """
     order = []
+    internal_counts = np.zeros(ir.n_trees, np.int32)
+    scannable = True
     for t in range(ir.n_trees):
         sl = slice(int(ir.node_offsets[t]), int(ir.node_offsets[t + 1]))
         is_leaf = ir.feature[sl] < 0
-        order.append(
-            np.concatenate(
-                [np.flatnonzero(~is_leaf), np.flatnonzero(is_leaf)]
-            ).astype(np.int32)
-        )
+        internal = np.flatnonzero(~is_leaf)
+        internal_counts[t] = len(internal)
+        perm = np.concatenate([internal, np.flatnonzero(is_leaf)]).astype(np.int32)
+        if scannable and len(internal):
+            inv = np.empty(len(perm), np.int32)
+            inv[perm] = np.arange(len(perm), dtype=np.int32)
+            kids = np.concatenate(
+                [inv[ir.left[sl][internal]], inv[ir.right[sl][internal]]]
+            )
+            scannable = bool((kids > np.tile(inv[internal], 2)).all())
+        order.append(perm)
     out = _padded_tables(ir, order)
     out.layout = "leaf_major"
+    out.internal_counts = internal_counts if scannable else None
     return out
 
 

@@ -7,8 +7,10 @@ and exposes an ensemble-level entry point.
 Layout contract (ForestIR): the kernel consumes dense ``(T, N)`` node tables
 — the IR's ``padded`` or ``leaf_major`` materializations (the paper's codegen
 step re-targeted at tensors).  ``packed_predict_integer`` accepts a
-``ForestIR`` directly and materializes ``padded``; the ``ragged`` layout has
-no VMEM-tileable shape and belongs to the table-walk C backend instead.
+``ForestIR`` directly and materializes the layout its resolved impl walks
+(``leaf_major`` for the linear-scan kernel, ``padded`` otherwise); the
+``ragged`` layout has no VMEM-tileable shape and belongs to the table-walk C
+backend instead.
 """
 from __future__ import annotations
 
@@ -19,19 +21,41 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.flint import float_to_key
-from repro.kernels.tree_traverse import tree_traverse_pallas
+from repro.kernels.tree_traverse import tree_traverse_leaf_major, tree_traverse_pallas
 
 _VMEM_BUDGET_BYTES = 8 * 1024 * 1024  # stay well under ~16 MiB v5e VMEM
 
 
+def _block_words(block_b, block_t, n, f, c):
+    """int32/uint32 words resident per grid cell: the x block, the four node
+    tables, the leaf table, the per-tree internal-count vector (leaf_major
+    working set), and the output block."""
+    return (
+        block_b * f
+        + block_t * n * 4
+        + block_t * n * c
+        + block_t
+        + block_b * c
+    )
+
+
 def pick_blocks(b, t, n, f, c, block_b=256):
-    """Choose (block_b, block_t) so the working set fits the VMEM budget."""
+    """Choose (block_b, block_t) so the working set fits the VMEM budget.
+
+    The tree dimension shrinks first; when even ``block_t == 1`` is over
+    budget (wide leaf tables — ``c`` large relative to ``n`` — make the
+    ``block_b * c`` output block and the ``n * c`` leaf rows dominate), the
+    row block halves and the search repeats.  The floor is (1, 1): a single
+    row against a single tree, the smallest working set any tiling can have.
+    """
     block_b = min(block_b, b)
-    for block_t in range(t, 0, -1):
-        words = block_b * f + block_t * n * 4 + block_t * n * c + block_b * c
-        if words * 4 <= _VMEM_BUDGET_BYTES:
-            return block_b, block_t
-    return block_b, 1
+    while True:
+        for block_t in range(t, 0, -1):
+            if _block_words(block_b, block_t, n, f, c) * 4 <= _VMEM_BUDGET_BYTES:
+                return block_b, block_t
+        if block_b == 1:
+            return 1, 1  # model-fixed minimum; nothing left to shrink
+        block_b //= 2
 
 
 @partial(jax.jit, static_argnames=("depth", "block_b", "block_t", "impl", "interpret"))
@@ -39,6 +63,14 @@ def _traverse_padded(x_keys, feature, key, left, right, leaf, *, depth, block_b,
     return tree_traverse_pallas(
         x_keys, feature, key, left, right, leaf,
         depth=depth, block_b=block_b, block_t=block_t, impl=impl, interpret=interpret,
+    )
+
+
+@partial(jax.jit, static_argnames=("block_b", "block_t", "interpret"))
+def _traverse_leaf_major(x_keys, feature, key, left, right, nint, leaf, *, block_b, block_t, interpret):
+    return tree_traverse_leaf_major(
+        x_keys, feature, key, left, right, nint, leaf,
+        block_b=block_b, block_t=block_t, interpret=interpret,
     )
 
 
@@ -55,11 +87,20 @@ def tree_predict_integer(
     block_t: int | None = None,
     impl: str = "gather",
     interpret: bool = True,
+    internal_counts=None,
 ):
     """Integer ensemble inference via the Pallas kernel, any B/T.
 
-    Returns (B, C) uint32 scores, bit-identical to ``ref.tree_predict_integer_ref``.
+    ``impl="leaf_major"`` selects the linear-scan kernel and requires
+    ``internal_counts`` (the leaf_major layout's per-tree internal-prefix
+    lengths); the other impls walk any node-table ordering.  Returns (B, C)
+    uint32 scores, bit-identical to ``ref.tree_predict_integer_ref``.
     """
+    if impl == "leaf_major" and internal_counts is None:
+        raise ValueError(
+            "impl='leaf_major' needs the layout's internal_counts; "
+            "materialize the forest as leaf_major (see repro.ir.layouts)"
+        )
     x_keys = jnp.asarray(x_keys, jnp.int32)
     b, f = x_keys.shape
     t, n = feature.shape
@@ -81,27 +122,56 @@ def tree_predict_integer(
         right = jnp.concatenate([right, selfloop], axis=0)
         leaf_fixed = jnp.pad(leaf_fixed, ((0, pad_t), (0, 0), (0, 0)))
 
-    out = _traverse_padded(
-        x_keys, feature, threshold_key, left, right, leaf_fixed,
-        depth=depth, block_b=block_b, block_t=block_t, impl=impl, interpret=interpret,
-    )
+    if impl == "leaf_major":
+        nint = jnp.asarray(internal_counts, jnp.int32)
+        if pad_t:  # inert trees have no internal prefix to scan
+            nint = jnp.pad(nint, (0, pad_t))
+        out = _traverse_leaf_major(
+            x_keys, feature, threshold_key, left, right, nint, leaf_fixed,
+            block_b=block_b, block_t=block_t, interpret=interpret,
+        )
+    else:
+        out = _traverse_padded(
+            x_keys, feature, threshold_key, left, right, leaf_fixed,
+            depth=depth, block_b=block_b, block_t=block_t, impl=impl,
+            interpret=interpret,
+        )
     return out[:b]
 
 
-def packed_predict_integer(packed, X, **kw):
+def packed_predict_integer(packed, X, impl: str = "auto", **kw):
     """Node-table entry point: float features in, (scores, preds) out.
 
     ``packed``: a node-table artifact (``PackedEnsemble`` in ``padded`` or
-    ``leaf_major`` layout) or a ``ForestIR`` (materialized as ``padded``).
+    ``leaf_major`` layout) or a ``ForestIR``.  ``impl="auto"`` resolves per
+    layout — the linear-scan kernel on ``leaf_major`` tables, ``gather`` on
+    ``padded`` — and a ForestIR is materialized into whichever layout the
+    resolved impl walks (``leaf_major`` for the scan, ``padded`` otherwise).
+    Pinning ``impl="leaf_major"`` on a padded artifact re-materializes it as
+    leaf_major through the IR back-reference.
     """
     if hasattr(packed, "materialize"):  # a ForestIR: take the kernel's layout
-        packed = packed.materialize("padded")
+        packed = packed.materialize(
+            "leaf_major" if impl in ("auto", "leaf_major") else "padded"
+        )
     layout = getattr(packed, "layout", "padded")
     if layout not in ("padded", "leaf_major"):
         raise ValueError(
             f"the Pallas kernel walks (T, N) node tables, not the {layout!r} "
             "layout; ragged belongs to the table-walk C backend"
         )
+    if impl == "auto":
+        # the scan needs the leaf_major internal prefix and its children-
+        # after-parents order (internal_counts is None when an imported
+        # forest violates it); any node order gather-walks fine
+        impl = ("leaf_major"
+                if layout == "leaf_major"
+                and getattr(packed, "internal_counts", None) is not None
+                else "gather")
+    if impl == "leaf_major" and layout != "leaf_major":
+        from repro.ir import resolve_artifact
+
+        packed = resolve_artifact(packed, "leaf_major")
     keys = float_to_key(jnp.asarray(X, jnp.float32))
     acc = tree_predict_integer(
         keys,
@@ -111,6 +181,8 @@ def packed_predict_integer(packed, X, **kw):
         jnp.asarray(packed.right),
         jnp.asarray(packed.leaf_fixed),
         depth=packed.max_depth,
+        impl=impl,
+        internal_counts=packed.internal_counts if impl == "leaf_major" else None,
         **kw,
     )
     return acc, jnp.argmax(acc, axis=1).astype(jnp.int32)

@@ -21,7 +21,7 @@ For the paper-scale ensembles (T<=100, depth<=8 -> N<=511, C<=7) everything
 fits in well under 1 MiB, far below the ~16 MiB v5e VMEM; ``ops.py`` checks
 the budget and splits the tree dimension when needed.
 
-Two gather strategies, selected statically:
+Three walk strategies, selected statically:
   * ``impl="gather"`` (default): ``jnp.take`` one-dim table gathers — lowers
     to Mosaic ``dynamic_gather`` (supported on v4+) and is O(block_b) work per
     level.
@@ -29,7 +29,13 @@ Two gather strategies, selected statically:
     sum) — O(block_b * N) work per level but uses only elementwise VPU ops;
     portable to any Pallas target.  This mirrors how the paper leans on the
     most basic ALU ops (load/add/compare) instead of specialized units.
-Both are validated against ``ref.py`` in interpret mode.
+  * ``impl="leaf_major"`` (:func:`tree_traverse_leaf_major`): the layout-
+    specialized variant for ``leaf_major`` tables — a single forward linear
+    scan over each tree's internal-node prefix with compare+select steps
+    (children always sit after parents, so one pass routes every row), one
+    leaf gather per tree at the end.  Depth-many table gathers disappear;
+    the scan reads each node's fields exactly once per row block.
+All are validated against ``ref.py`` in interpret mode.
 """
 from __future__ import annotations
 
@@ -99,6 +105,98 @@ def _kernel(x_ref, feat_ref, key_ref, left_ref, right_ref, leaf_ref, out_ref, *,
 
     acc = jax.lax.fori_loop(0, block_t, per_tree, jnp.zeros_like(out_ref[...]))
     out_ref[...] += acc
+
+
+def _kernel_leaf_major(x_ref, feat_ref, key_ref, left_ref, right_ref,
+                       nint_ref, leaf_ref, out_ref, *, block_t):
+    """Linear-scan walk over the leaf_major layout's internal-node prefix.
+
+    The layout guarantees (a) tree nodes are permuted internal-first, so
+    indices [0, n_internal) are exactly the split nodes, and (b) every child
+    sits at a strictly larger index than its parent.  One forward pass over
+    the prefix therefore routes every row to its leaf: when the scan reaches
+    node j, any row currently parked at j steps to a child with index > j,
+    which a later scan step (or the final leaf gather) picks up.  Per node
+    the work is elementwise compare+select over the row block — no per-depth
+    node-table gathers at all; the only gather left is one leaf-row fetch per
+    (row, tree) at the end.  Rows parked on leaves are untouched by
+    construction (leaves self-loop), so scanning past a tree's real prefix
+    (padding nodes) is harmless and inert trees (n_internal == 0) skip the
+    scan entirely.
+    """
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...]  # (block_b, F) int32 keys
+    bb = x.shape[0]
+
+    def per_tree(t, acc):
+        n_int = nint_ref[t]
+
+        def scan_node(j, node):
+            feat = feat_ref[t, j]
+            thr = key_ref[t, j]
+            nl = left_ref[t, j]
+            nr = right_ref[t, j]
+            # the scanned node reads ONE feature column — a single dynamic
+            # slice, O(block_b) work, no per-row gather
+            xv = jax.lax.dynamic_slice_in_dim(
+                x, jnp.maximum(feat, 0), 1, axis=1
+            )[:, 0]
+            nxt = jnp.where(xv <= thr, nl, nr)
+            return jnp.where(node == j, nxt, node)
+
+        node = jax.lax.fori_loop(0, n_int, scan_node, jnp.zeros((bb,), jnp.int32))
+        return acc + _gather_rows(leaf_ref[t, :, :], node, "gather")
+
+    acc = jax.lax.fori_loop(0, block_t, per_tree, jnp.zeros_like(out_ref[...]))
+    out_ref[...] += acc
+
+
+def tree_traverse_leaf_major(
+    x_keys,
+    feature,
+    threshold_key,
+    left,
+    right,
+    internal_counts,
+    leaf_fixed,
+    *,
+    block_b: int = 256,
+    block_t: int | None = None,
+    interpret: bool = True,
+):
+    """Raw pallas_call over leaf_major tables; shapes must divide evenly.
+
+    Same (B, C) uint32 contract as :func:`tree_traverse_pallas` but walks the
+    internal-node prefix front-to-back (``internal_counts`` is the layout's
+    per-tree prefix length) instead of gathering node fields per depth level.
+    """
+    b, f = x_keys.shape
+    t, n = feature.shape
+    c = leaf_fixed.shape[-1]
+    block_t = block_t or t
+    assert b % block_b == 0 and t % block_t == 0
+    grid = (b // block_b, t // block_t)
+
+    kernel = functools.partial(_kernel_leaf_major, block_t=block_t)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, f), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_t, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_t, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_t, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_t, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_t,), lambda i, j: (j,)),
+            pl.BlockSpec((block_t, n, c), lambda i, j: (j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, c), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, c), jnp.uint32),
+        interpret=interpret,
+    )(x_keys, feature, threshold_key, left, right, internal_counts, leaf_fixed)
 
 
 def tree_traverse_pallas(

@@ -164,16 +164,25 @@ def serve_gateway(args):
     from repro.serve.registry import ModelRegistry
     from repro.trees.forest import RandomForestClassifier
 
+    if args.gw_block_rows is not None and args.gw_backend != "native_c_table":
+        raise SystemExit(
+            "--gw-block-rows is the table-walk C row-block knob; it needs "
+            "--gw-backend native_c_table (got "
+            f"{args.gw_backend!r})"
+        )
+    bk = ({"block_rows": args.gw_block_rows}
+          if args.gw_block_rows is not None else None)
+
     registry = ModelRegistry()
     t0 = time.time()
     pools, (Xtr, ytr) = build_gateway_models(registry, rows=args.rows // 2 or 4000)
     print(f"registered models in {time.time()-t0:.1f}s: {registry.describe()}")
-
     gateway = Gateway(
         registry,
         mode=args.gw_mode,
         backend=args.gw_backend,
         layout=args.gw_layout,
+        backend_kwargs=bk,
         max_batch_rows=args.gw_batch_rows,
         max_delay_ms=args.gw_max_delay_ms,
         max_queue_rows=args.gw_queue_rows,
@@ -183,7 +192,8 @@ def serve_gateway(args):
     t0 = time.time()
     for mid in registry.ids():
         registry.get(mid).engine(
-            args.gw_mode, backend=args.gw_backend, layout=args.gw_layout
+            args.gw_mode, backend=args.gw_backend, layout=args.gw_layout,
+            backend_kwargs=bk,
         ).warm(args.gw_batch_rows)
     print(f"warmed shape buckets in {time.time()-t0:.1f}s")
 
@@ -280,6 +290,10 @@ def main(argv=None):
                     choices=tuple(available_layouts()),
                     help="ForestIR layout to materialize (default: the "
                          "backend's preferred layout)")
+    ap.add_argument("--gw-block-rows", type=int, default=None,
+                    help="rows in flight per tree for the table-walk C "
+                         "backend (1 = scalar walk; default: the backend's "
+                         "preferred_block_rows)")
     ap.add_argument("--arch", default="granite-3-2b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)

@@ -35,6 +35,7 @@ from repro.serve.registry import ModelRegistry
 class Gateway:
     def __init__(self, registry: ModelRegistry, *, mode: str = "integer",
                  backend: str = "reference", layout: str = None,
+                 backend_kwargs: dict = None,
                  max_batch_rows: int = 256,
                  max_delay_ms: float = 2.0, max_queue_rows: int = 4096,
                  cache_rows: int = 65536):
@@ -42,6 +43,9 @@ class Gateway:
         self.mode = mode
         self.backend = backend
         self.layout = layout  # None -> the backend's preferred ForestIR layout
+        # construction-time backend knobs (e.g. native_c_table's block_rows,
+        # pallas' impl) — forwarded to every engine this gateway builds
+        self.backend_kwargs = backend_kwargs
         self.metrics = MetricsRegistry()
         # validate the route up front and let the backend's declared
         # capabilities decide cacheability: the cache is only sound when the
@@ -72,7 +76,8 @@ class Gateway:
     def _execute(self, model_id: str, X: np.ndarray):
         """Batch executor handed to the MicroBatcher (runs in a thread)."""
         mv = self.registry.get(model_id)  # resolve version at dispatch time
-        eng = mv.engine(self.mode, backend=self.backend, layout=self.layout)
+        eng = mv.engine(self.mode, backend=self.backend, layout=self.layout,
+                        backend_kwargs=self.backend_kwargs)
         scores, preds = eng.predict_scores(X)
         # meta = the version that actually computed, so cache fills are keyed
         # consistently even when a hot-swap lands between submit and dispatch

@@ -59,6 +59,12 @@ def pytest_configure(config):
         "markers",
         "requires_gcc: test compiles emitted C; skipped when gcc is absent",
     )
+    config.addinivalue_line(
+        "markers",
+        "slow: long end-to-end runs (training drivers, Poisson gateway "
+        'workloads); CI deselects them with -m "not slow", `make check` '
+        "still runs everything",
+    )
 
 
 def pytest_collection_modifyitems(config, items):

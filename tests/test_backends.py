@@ -88,13 +88,17 @@ def test_capability_flags():
     assert not nat.compiles_per_shape  # the C loop takes any row count
     assert pal.preferred_block_rows == 256  # aligns buckets with kernel tiles
     # layout axis: node-table backends walk both (T, N) orderings; the
-    # table-walk C backend is the ragged layout's consumer
+    # table-walk C backend is the ragged layout's consumer.  Pallas prefers
+    # leaf_major (the linear-scan kernel's layout); the others stay padded.
     for caps in (ref, pal, nat):
         assert set(caps.supported_layouts) == {"padded", "leaf_major"}
-        assert caps.preferred_layout == "padded"
+    assert ref.preferred_layout == "padded"
+    assert nat.preferred_layout == "padded"
+    assert pal.preferred_layout == "leaf_major"
     assert tbl.supported_layouts == ("ragged",)
     assert tbl.preferred_layout == "ragged"
     assert set(tbl.modes) == {"flint", "integer"}  # integer-compare modes only
+    assert tbl.preferred_block_rows == 8  # row-blocked table walk default
     assert not tbl.compiles_per_shape
 
 
@@ -302,6 +306,126 @@ def test_cross_layout_bit_identity_degenerate(degenerate_case, backend):
                                       err_msg=f"{backend}/{layout}/{mode}")
         np.testing.assert_array_equal(np.asarray(p), p_ref,
                                       err_msg=f"{backend}/{layout}/{mode}")
+
+
+# ------------------------------------------- execution-variant conformance
+# The layout axis above is crossed with each backend's execution variants:
+# the Pallas walk strategies (per-depth gather / onehot select / leaf_major
+# linear scan) and the table-walk C row-block sizes.  Every variant must be
+# bit-identical to the reference walk on randomized AND degenerate forests.
+
+PALLAS_IMPLS = ["gather", "onehot", "leaf_major"]
+BLOCK_ROWS = [1, 4, 8]
+
+
+def _pallas_variant_engine(ir, impl):
+    layout = "leaf_major" if impl == "leaf_major" else "padded"
+    return TreeEngine(ir, mode="integer", backend="pallas", layout=layout,
+                      backend_kwargs={"impl": impl})
+
+
+@pytest.mark.parametrize("impl", PALLAS_IMPLS)
+def test_pallas_impl_variants_randomized(random_case, impl):
+    packed, rows = random_case
+    s_ref, p_ref = _scores(create_backend("reference", packed, mode="integer"), rows)
+    eng = _pallas_variant_engine(packed.to_ir(), impl)
+    assert eng.backend.impl == impl
+    s, p = eng.predict_scores(rows)
+    np.testing.assert_array_equal(np.asarray(s), s_ref, err_msg=f"pallas/{impl}")
+    np.testing.assert_array_equal(np.asarray(p), p_ref, err_msg=f"pallas/{impl}")
+
+
+@pytest.mark.parametrize("impl", ["gather", "leaf_major"])
+def test_pallas_impl_variants_degenerate(degenerate_case, impl):
+    """Stumps (no internal prefix at all), T == 1, and depth-skewed trees
+    through both the gather walk and the linear scan."""
+    ir, rows = degenerate_case
+    s_ref, p_ref = _scores(
+        create_backend("reference", ir.materialize("padded"), mode="integer"), rows
+    )
+    s, p = _pallas_variant_engine(ir, impl).predict_scores(rows)
+    np.testing.assert_array_equal(np.asarray(s), s_ref, err_msg=f"pallas/{impl}")
+    np.testing.assert_array_equal(np.asarray(p), p_ref, err_msg=f"pallas/{impl}")
+
+
+def test_pallas_leaf_major_impl_rejects_padded_artifact(small_packed):
+    with pytest.raises(ValueError, match="leaf_major"):
+        create_backend("pallas", small_packed, mode="integer", impl="leaf_major")
+
+
+def _child_before_parent_forest():
+    """A topologically valid tree whose arrays order an internal child
+    *before* its parent (0 -> 3 -> 1) — legal for every gather walker, but
+    it breaks the forward-scan invariant; imported artifacts can look like
+    this."""
+    from repro.trees.cart import TreeArrays
+
+    feature = np.array([0, 0, -1, 0, -1, -1, -1], np.int32)
+    threshold = np.array([0.0, -2.0, 0, 2.0, 0, 0, 0], np.float32)
+    left = np.array([3, 4, 2, 1, 4, 5, 6], np.int32)
+    right = np.array([2, 5, 2, 6, 4, 5, 6], np.int32)
+    probs = np.zeros((7, 3))
+    for leaf, c in ((2, 0), (4, 1), (5, 2), (6, 0)):
+        probs[leaf, c] = 1.0
+    tree = TreeArrays(feature=feature, threshold=threshold, left=left,
+                      right=right, leaf_probs=probs, depth=3)
+    return _forest_from_trees([tree], 3, 2)
+
+
+def test_pallas_auto_falls_back_to_gather_on_unscannable_order():
+    """leaf_major materialization of a child-before-parent forest records no
+    internal prefix; impl='auto' gather-walks it and stays bit-identical,
+    while pinning the scan fails loudly instead of mis-scoring."""
+    ir = ForestIR.from_forest(_child_before_parent_forest())
+    lm = ir.materialize("leaf_major")
+    assert lm.internal_counts is None
+    rows = np.random.default_rng(3).normal(0, 3, (29, 2)).astype(np.float32)
+    s_ref, p_ref = _scores(
+        create_backend("reference", ir.materialize("padded"), mode="integer"), rows
+    )
+    eng = TreeEngine(ir, mode="integer", backend="pallas", layout="leaf_major")
+    assert eng.backend.impl == "gather"  # auto resolved away from the scan
+    s, p = eng.predict_scores(rows)
+    np.testing.assert_array_equal(np.asarray(s), s_ref)
+    np.testing.assert_array_equal(np.asarray(p), p_ref)
+    with pytest.raises(ValueError, match="scannable"):
+        create_backend("pallas", lm, mode="integer", impl="leaf_major")
+
+
+@pytest.mark.requires_gcc
+@pytest.mark.parametrize("block_rows", BLOCK_ROWS)
+@pytest.mark.parametrize("mode", ["flint", "integer"])
+def test_table_walk_block_rows_randomized(random_case, block_rows, mode):
+    """Scalar vs row-blocked table-walk C: bit-identical at every block
+    size, including batches that leave a partial tail block (97 rows)."""
+    packed, rows = random_case
+    s_ref, p_ref = _scores(create_backend("reference", packed, mode=mode), rows)
+    eng = TreeEngine(packed.to_ir(), mode=mode, backend="native_c_table",
+                     backend_kwargs={"block_rows": block_rows})
+    assert eng.backend.block_rows == block_rows
+    s, p = eng.predict_scores(rows)
+    np.testing.assert_array_equal(np.asarray(s), s_ref,
+                                  err_msg=f"table/{block_rows}/{mode}")
+    np.testing.assert_array_equal(np.asarray(p), p_ref,
+                                  err_msg=f"table/{block_rows}/{mode}")
+
+
+@pytest.mark.requires_gcc
+@pytest.mark.parametrize("block_rows", BLOCK_ROWS)
+def test_table_walk_block_rows_degenerate(degenerate_case, block_rows):
+    """Degenerate forests through the blocked walk: stumps never enter the
+    level loop, depth-skewed trees exercise the all-leaves early exit."""
+    ir, rows = degenerate_case
+    s_ref, p_ref = _scores(
+        create_backend("reference", ir.materialize("padded"), mode="integer"), rows
+    )
+    eng = TreeEngine(ir, mode="integer", backend="native_c_table",
+                     backend_kwargs={"block_rows": block_rows})
+    s, p = eng.predict_scores(rows)
+    np.testing.assert_array_equal(np.asarray(s), s_ref,
+                                  err_msg=f"table/{block_rows}")
+    np.testing.assert_array_equal(np.asarray(p), p_ref,
+                                  err_msg=f"table/{block_rows}")
 
 
 def test_degenerate_ragged_has_no_padding_waste(degenerate_case):

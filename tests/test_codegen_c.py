@@ -114,6 +114,45 @@ def test_emit_table_walk_c_structure(small_packed):
         emit_table_walk_c(rg, mode="float")
 
 
+def test_emit_table_walk_blocked_structure(small_packed):
+    """block_rows=R switches to interleaved node quads and emits the blocked
+    predict_batch: R register chains, branch-free selects, early exit."""
+    from repro.codegen.table_emitter import emit_table_walk_c
+
+    rg = small_packed.to_ir().materialize("ragged")
+    src = emit_table_walk_c(rg, mode="integer", block_rows=4)
+    assert "node_quad" in src and "node_feature" not in src  # interleaved
+    assert f"node_quad[{rg.total_nodes * 4}]" in src
+    assert "walk_block_full" in src and "void predict_batch" in src
+    for k in range(4):
+        assert f"int32_t n{k} = root;" in src  # register chains, unrolled
+    assert "(f0 & f1 & f2 & f3) < 0" in src  # all-leaves early exit
+    walk = src[src.index("walk_block_full"):src.index("void predict_batch")]
+    assert "go0" in walk and "?" not in walk  # arithmetic selects, no ternary
+    # single-row predict still present (tail blocks + harness contract)
+    assert src.count("while (f >= 0)") == 1
+    # the scalar emission is unchanged by the new parameter's default
+    assert "node_quad" not in emit_table_walk_c(rg, mode="integer")
+
+
+@pytest.mark.requires_gcc
+def test_compiled_blocked_table_walk_matches_scalar(small_packed, shuttle_small):
+    """The blocked shared-library path == the scalar path bit-for-bit on a
+    row count that exercises full blocks AND a partial tail."""
+    from repro.backends import create_backend
+
+    _, _, Xte, _ = shuttle_small
+    rows = Xte[:203]  # 25 full blocks of 8 + tail of 3
+    rg = small_packed.to_ir().materialize("ragged")
+    base = create_backend("native_c_table", rg, mode="integer", block_rows=1)
+    s_ref, p_ref = base.predict_scores(rows)
+    for br in (4, 8):
+        be = create_backend("native_c_table", rg, mode="integer", block_rows=br)
+        s, p = be.predict_scores(rows)
+        np.testing.assert_array_equal(s, s_ref)
+        np.testing.assert_array_equal(p, p_ref)
+
+
 @pytest.mark.requires_gcc
 def test_compiled_table_walk_matches_if_else(small_packed, shuttle_small):
     """Both C strategies — forest-as-code (if-else) and forest-as-data

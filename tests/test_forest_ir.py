@@ -103,6 +103,25 @@ def test_leaf_major_layout_orders_internal_first(small_packed):
         assert (feats[0] >= 0) == root_is_internal
 
 
+def test_leaf_major_records_internal_counts(small_packed):
+    """The layout must record the per-tree internal-prefix length and keep
+    children after parents inside the prefix — the two facts the linear-scan
+    kernel walks on."""
+    lm = resolve_artifact(small_packed, "leaf_major")
+    ir = small_packed.ir
+    assert lm.internal_counts is not None and len(lm.internal_counts) == lm.n_trees
+    for t in range(lm.n_trees):
+        n = int(ir.node_counts[t])
+        n_int = int(lm.internal_counts[t])
+        assert n_int == int((lm.feature[t, :n] >= 0).sum())
+        # forward-scan invariant: every child index exceeds its parent's
+        parents = np.flatnonzero(lm.feature[t, :n] >= 0)
+        assert (lm.left[t, parents] > parents).all()
+        assert (lm.right[t, parents] > parents).all()
+    # the padded layout does not claim an internal prefix
+    assert resolve_artifact(small_packed, "padded").internal_counts is None
+
+
 def test_from_packed_recovers_ir_exactly(small_forest):
     ir = ForestIR.from_forest(small_forest)
     # a bare artifact with no back-reference (the register_packed path)

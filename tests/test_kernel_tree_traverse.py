@@ -85,3 +85,75 @@ def test_vmem_budget_picker():
     words = bb * 87 + bt * 2047 * 4 + bt * 2047 * 8 + bb * 8
     assert words * 4 <= 8 * 1024 * 1024
     assert bb >= 1 and bt >= 1
+
+
+def test_vmem_budget_picker_wide_leaf_tables():
+    """Regression: with c large relative to n the ``block_b * c`` output
+    block alone can bust the budget at ``block_t == 1`` — the picker used to
+    return it unchecked.  The row block must shrink until the whole
+    leaf-major working set (incl. the internal-counts vector) fits."""
+    from repro.kernels.ops import _VMEM_BUDGET_BYTES, _block_words
+
+    cases = [
+        dict(b=4096, t=4, n=31, f=16, c=16384),   # output block dominates
+        dict(b=4096, t=2, n=3, f=8, c=400000),    # degenerate: even bt=1 huge
+        dict(b=4096, t=128, n=2047, f=87, c=8),   # the historical case
+    ]
+    for kw in cases:
+        bb, bt = pick_blocks(**kw)
+        assert bb >= 1 and bt >= 1
+        words = _block_words(bb, bt, kw["n"], kw["f"], kw["c"])
+        if _block_words(1, 1, kw["n"], kw["f"], kw["c"]) * 4 <= _VMEM_BUDGET_BYTES:
+            assert words * 4 <= _VMEM_BUDGET_BYTES, kw
+
+
+@pytest.mark.parametrize(
+    "n_trees,depth,n_features,n_classes",
+    [(3, 3, 4, 2), (7, 5, 7, 7), (12, 6, 11, 3)],
+)
+def test_leaf_major_scan_matches_ref_sweep(n_trees, depth, n_features, n_classes):
+    """The linear-scan kernel over leaf_major tables == the jnp oracle over
+    the padded tables, across forest shapes and with row/tree padding."""
+    packed, X = _forest(n_trees, depth, n_features, n_classes)
+    keys = float_to_key(jnp.asarray(X[:217]))  # odd rows: padding path
+    feature, tkey, left, right, leaf = _args(packed)
+    ref = tree_predict_integer_ref(keys, feature, tkey, left, right, leaf, packed.max_depth)
+    lm = packed.to_ir().materialize("leaf_major")
+    out = tree_predict_integer(
+        keys,
+        jnp.asarray(lm.feature), jnp.asarray(lm.threshold_key),
+        jnp.asarray(lm.left), jnp.asarray(lm.right), jnp.asarray(lm.leaf_fixed),
+        depth=lm.max_depth, block_b=64, block_t=2,
+        impl="leaf_major", internal_counts=lm.internal_counts,
+    )
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    assert out.dtype == jnp.uint32
+
+
+def test_leaf_major_impl_requires_internal_counts():
+    packed, X = _forest(3, 3, 4, 2)
+    keys = float_to_key(jnp.asarray(X[:8]))
+    feature, tkey, left, right, leaf = _args(packed)
+    with pytest.raises(ValueError, match="internal_counts"):
+        tree_predict_integer(
+            keys, feature, tkey, left, right, leaf,
+            depth=packed.max_depth, impl="leaf_major",
+        )
+
+
+def test_packed_entry_point_auto_impl(small_packed, shuttle_small):
+    """``impl="auto"`` resolves per layout and stays bit-identical; pinning
+    ``impl="leaf_major"`` on a padded artifact re-materializes via the IR."""
+    from repro.core.ensemble import predict_integer
+
+    _, _, Xte, _ = shuttle_small
+    acc_ref, pred_ref = predict_integer(small_packed, Xte[:150])
+    lm = small_packed.to_ir().materialize("leaf_major")
+    for packed, kw in (
+        (lm, {}),                            # auto on leaf_major -> scan
+        (small_packed, {}),                  # auto on padded -> gather
+        (small_packed, {"impl": "leaf_major"}),  # pinned: re-materializes
+    ):
+        acc, pred = packed_predict_integer(packed, Xte[:150], block_b=32, **kw)
+        np.testing.assert_array_equal(np.asarray(acc), np.asarray(acc_ref))
+        np.testing.assert_array_equal(np.asarray(pred), np.asarray(pred_ref))

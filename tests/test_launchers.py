@@ -4,6 +4,7 @@ import numpy as np
 import pytest
 
 
+@pytest.mark.slow
 def test_train_driver_loss_descends(capsys):
     from repro.launch.train import main
 
@@ -15,6 +16,7 @@ def test_train_driver_loss_descends(capsys):
     assert losses[-1] < losses[0] - 0.2, (losses[0], losses[-1])
 
 
+@pytest.mark.slow
 def test_train_driver_checkpoints(tmp_path):
     from repro.launch.train import main
 
@@ -27,6 +29,7 @@ def test_train_driver_checkpoints(tmp_path):
     assert CheckpointManager(tmp_path).latest_step() == 10
 
 
+@pytest.mark.slow
 def test_serve_driver_trees(capsys):
     import shutil
 
@@ -41,6 +44,7 @@ def test_serve_driver_trees(capsys):
     assert out.count("agree_with_float=1.000000") == expected
 
 
+@pytest.mark.slow
 def test_serve_driver_gateway(capsys):
     from repro.launch.serve import main
 
@@ -52,6 +56,7 @@ def test_serve_driver_gateway(capsys):
     assert "cache_hit_rate" in out  # metrics table rendered
 
 
+@pytest.mark.slow
 def test_serve_driver_lm(capsys):
     from repro.launch.serve import main
 
