@@ -15,11 +15,16 @@ test:
 test-fast:
 	$(PY) -m pytest -q -m "not slow"
 
-# cross-(backend, layout, variant) bit-identity suite: reference / pallas
-# (gather + leaf_major linear scan) / native_c / native_c_table (block_rows
-# 1/4/8) x padded / ragged / leaf_major
+# cross-(backend, layout, variant, plan) bit-identity suite: reference /
+# pallas (gather + leaf_major linear scan) / native_c / native_c_table
+# (block_rows 1/4/8) x padded / ragged / leaf_major x {single,
+# tree_parallel(2,3,8), row_parallel(2,4)}.  XLA is forced to 8 host
+# devices so the tree-parallel shard_map path runs for real (the same
+# configuration CI uses) — without the flag those cases fall back to the
+# threaded per-shard-backend path, which must be bit-identical anyway.
 conformance:
-	$(PY) -m pytest -q tests/test_backends.py
+	XLA_FLAGS="--xla_force_host_platform_device_count=8 $$XLA_FLAGS" \
+		$(PY) -m pytest -q tests/test_backends.py tests/test_plans.py
 
 # the full gate: tier-1 tests, then the conformance suite standalone
 check: test conformance
@@ -27,10 +32,13 @@ check: test conformance
 bench:
 	$(PY) benchmarks/run.py
 
-# tiny-forest bench pass: proves every backend executes and produces the
-# benchmarks/artifacts/bench_results.json artifact CI uploads
+# tiny-forest bench pass: proves every backend and every execution plan
+# executes (plan_scaling runs the shard_map tree-parallel path on 8 forced
+# host devices) and produces the benchmarks/artifacts/bench_results.json
+# artifact CI uploads
 bench-smoke:
-	REPRO_BENCH_TINY=1 $(PY) benchmarks/run.py backend_matrix memory_footprint
+	REPRO_BENCH_TINY=1 REPRO_BENCH_DEVICES=8 \
+		$(PY) benchmarks/run.py backend_matrix memory_footprint plan_scaling
 
 # exactly what .github/workflows/ci.yml runs, as one local target
 ci: test-fast conformance bench-smoke

@@ -11,6 +11,7 @@ absolute TPU projections live in the roofline table (§Roofline).
   IV-E    -> memory_footprint         (artifact bytes, MCU-style)
   IV-F    -> energy_model             (paper's E_saved formula)
   kernels -> kernel_identity          (Pallas kernel == oracle, us/row)
+  plans   -> plan_scaling             (ns/row vs shard count, tree/row-parallel)
   §Roofline -> roofline_table         (from dry-run artifacts)
 """
 from __future__ import annotations
@@ -29,6 +30,17 @@ ROWS = []
 # full pipeline runs in seconds: numbers are still *reported* but only prove
 # every backend executes — perf conclusions need the full-size run.
 TINY = bool(int(os.environ.get("REPRO_BENCH_TINY", "0") or "0"))
+
+# REPRO_BENCH_DEVICES=N forces N XLA host-platform devices *before* jax is
+# first imported (all jax imports in this harness are lazy), so the
+# plan_scaling section can exercise real shard_map tree-parallel execution
+# on a CPU-only host — the same trick the CI conformance job uses.
+_N_DEV = os.environ.get("REPRO_BENCH_DEVICES")
+if _N_DEV and "jax" not in __import__("sys").modules:
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={int(_N_DEV)}"
+    ).strip()
 
 
 def emit(name: str, us_per_call: float, derived: str):
@@ -428,6 +440,57 @@ def backend_matrix():
             )
 
 
+def plan_scaling():
+    """Execution-plan axis: ns/row vs shard count, tree- and row-parallel.
+
+    Tree-parallel shards a *wide* forest (the tree scan dominates, so carving
+    it across devices is the win the paper's associative integer sum makes
+    lossless); with ``REPRO_BENCH_DEVICES=8`` the reference shards run as one
+    ``shard_map`` over forced host devices (the CI configuration), otherwise
+    as a thread pool of sub-forest backends.  Row-parallel shards the batch
+    on the same model.  Every plan's scores are asserted bit-identical to
+    the single-shard baseline before timing — the conformance property, live
+    in the bench.
+    """
+    import jax
+
+    from repro.serve.engine import TreeEngine
+
+    data = _datasets()["shuttle"]
+    # wide & shallow: many trees, small per-tree walk — the tree-parallel
+    # regime (depth keeps the padded tables tiny so S copies stay cheap)
+    rf, packed, Xte, _ = _forest(data, 24 if TINY else 96, depth=4 if TINY else 6)
+    batch = 256 if TINY else 2048
+    X = Xte[:batch]
+
+    single = TreeEngine(packed, mode="integer")
+    single.warm(batch)
+    s_ref, _ = single.predict_scores(X)
+    t_single = _time(single.predict_scores, X, reps=3)
+    emit(
+        f"plan_single_b{batch}", t_single,
+        f"ns_per_row={t_single * 1e3 / batch:.1f};shards=1;"
+        f"devices={len(jax.devices())}",
+    )
+
+    for plan, shard_counts in (("tree_parallel", (2, 4, 8)),
+                               ("row_parallel", (2, 4))):
+        for shards in shard_counts:
+            eng = TreeEngine(packed, mode="integer", plan=plan, shards=shards)
+            eng.warm(batch)
+            s, _ = eng.predict_scores(X)
+            assert (np.asarray(s) == np.asarray(s_ref)).all(), \
+                f"{plan}({shards}) diverged from single-shard"
+            us = _time(eng.predict_scores, X, reps=3)
+            fused = bool(getattr(eng.plan, "fused", False))
+            emit(
+                f"plan_{plan}_s{shards}_b{batch}", us,
+                f"ns_per_row={us * 1e3 / batch:.1f};"
+                f"speedup_vs_single={t_single / us:.2f}x;"
+                f"fused={fused};shards={eng.n_shards}",
+            )
+
+
 def roofline_table():
     """§Roofline: summarize every dry-run artifact (see EXPERIMENTS.md)."""
     dd = ART / "dryrun"
@@ -458,6 +521,7 @@ BENCHES = (
     energy_model,
     kernel_identity,
     backend_matrix,
+    plan_scaling,
     gateway_vs_naive,
     roofline_table,
 )

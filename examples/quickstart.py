@@ -64,12 +64,19 @@ if have_c_toolchain():
     engines["native_c_table/ragged"] = TreeEngine(
         ir, mode="integer", backend="native_c_table",
         backend_kwargs={"block_rows": 8})
+# sharded execution plans: carve the forest into tree-contiguous sub-forests
+# (ForestIR.subset) or split the batch — the uint32 accumulator is an exact
+# associative sum, so merged partial scores are bit-identical to single-shard
+engines["plan/tree_parallel(4)"] = TreeEngine(ir, mode="integer",
+                                              plan="tree_parallel", shards=4)
+engines["plan/row_parallel(2)"] = TreeEngine(ir, mode="integer",
+                                             plan="row_parallel", shards=2)
 s_ref, _ = eng_padded.predict_scores(Xte[:256])
 for name, eng in engines.items():
     s, _ = eng.predict_scores(Xte[:256])
     assert (np.asarray(s) == np.asarray(s_ref)).all(), name
-print(f"bit-identical uint32 scores across {len(engines)} (backend, layout) routes:",
-      ", ".join(sorted(engines)))
+print(f"bit-identical uint32 scores across {len(engines)} "
+      "(backend, layout, plan) routes:", ", ".join(sorted(engines)))
 
 # 7. the paper's deliverable: freestanding integer-only C
 c_src = emit_c(packed, mode="integer")

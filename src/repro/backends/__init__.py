@@ -1,10 +1,13 @@
 """Pluggable execution backends for materialized tree ensembles.
 
-One protocol (:class:`TreeBackend`: ``predict_scores(X) -> (scores, preds)``
-plus declared :class:`BackendCapabilities`) behind four implementations:
+One protocol (:class:`TreeBackend`: ``predict_partials(X) -> uint32
+accumulators`` — the shardable half of inference — with ``predict_scores(X)
+-> (scores, preds)`` as the finalize-wrapping compatibility surface, plus
+declared :class:`BackendCapabilities`) behind four implementations:
 
   * ``reference``      — the jitted jnp node-table walk (all three modes),
-  * ``pallas``         — the VMEM-tiled TPU kernel (integer mode),
+  * ``pallas``         — the VMEM-tiled TPU kernel (flint + integer: one
+                         integer accumulation, two finalizes),
   * ``native_c``       — the paper's emitted if-else C, compiled once per
                          model into a shared library and called via ctypes,
   * ``native_c_table`` — the ragged-layout table-walk C (data-as-arrays,
@@ -12,11 +15,12 @@ plus declared :class:`BackendCapabilities`) behind four implementations:
 
 Backends register by name and declare which ForestIR layouts they walk
 (``supported_layouts``/``preferred_layout``); the serving stack (``TreeEngine``
-/ ``ModelRegistry`` / ``Gateway``) resolves the layout through the IR and
-routes per-(model, mode, backend, layout) via :func:`create_backend`, never
-special-casing an implementation.  For the deterministic modes (flint/integer)
-all backends are bit-identical across all supported layouts — see
-``tests/test_backends.py`` / ``make conformance``.
+/ ``ExecutionPlan`` / ``ModelRegistry`` / ``Gateway``) resolves the layout
+through the IR and routes per-(model, mode, plan, backend, layout) via
+:func:`create_backend`, never special-casing an implementation.  For the
+deterministic modes (flint/integer) all backends are bit-identical across
+all supported layouts AND all execution plans — see ``tests/test_backends.py``
+/ ``tests/test_plans.py`` / ``make conformance``.
 """
 from repro.backends.base import (
     BackendCapabilities,

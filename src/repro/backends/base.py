@@ -4,13 +4,26 @@ InTreeger's central claim is that one trained ensemble yields bit-identical
 integer-only inference on any hardware.  This module makes that claim an
 *interface*: every execution strategy for a :class:`~repro.core.packing.
 PackedEnsemble` — the jnp reference walk, the Pallas VMEM-tiled kernel, the
-paper's literal emitted C — implements the same two-method surface
+paper's literal emitted C — implements the same surface
 
-    predict_scores(X) -> (scores, preds)
+    predict_partials(X) -> (B, C) uint32 partial accumulators
+    predict_scores(X)   -> (scores, preds)
 
 and declares what it can do via :class:`BackendCapabilities`.  The serving
 stack (``repro.serve``) routes per-(model, mode, backend) purely through this
-layer; nothing above a backend may special-case how inference runs.
+layer — through an execution plan (``repro.plan``) that may carve the forest
+into tree shards, call ``predict_partials`` on each, merge the exact integer
+partial sums, and run the standalone finalize step once; nothing above a
+backend may special-case how inference runs.
+
+``predict_partials`` is the shardable half of inference: for the
+deterministic modes (flint/integer) it returns the raw uint32 fixed-point
+accumulator, which is associative, so partials of a sub-forest artifact
+(``ForestIR.subset``) merge into the full forest's accumulator bit-exactly.
+``predict_scores`` is kept as the compatibility wrapper — for deterministic
+modes the base class implements it as ``finalize(predict_partials(X))`` with
+the one shared :func:`repro.core.ensemble.finalize_partials`, so every
+backend's scores are the same function of the same exact integers.
 
 Scores are mode-typed exactly as in ``repro.core.ensemble``: float32 average
 probabilities for ``float``/``flint``, uint32 fixed-point class sums for
@@ -108,13 +121,39 @@ class TreeBackend(abc.ABC):
         """True when outputs are bit-exact integer scores (cacheable)."""
         return self.mode in self.capabilities.deterministic_modes
 
-    @abc.abstractmethod
+    def predict_partials(self, X):
+        """Float features (B, F) in -> (B, C) uint32 partial accumulators.
+
+        The shardable half of inference: the raw fixed-point sums *before*
+        the finalize step, exact and associative, so a plan can merge them
+        across tree shards bit-losslessly.  Defined for the deterministic
+        modes; backends serving only non-deterministic modes (float) leave
+        this unimplemented.  ``X`` is always in the *float* domain; the
+        backend owns its own domain transform (FlInt keying).
+        """
+        raise NotImplementedError(
+            f"backend {self.name!r} does not expose integer partials for "
+            f"mode {self.mode!r}"
+        )
+
     def predict_scores(self, X):
         """Float features (B, F) in -> (scores (B, C), preds (B,) int32).
 
-        ``X`` is always in the *float* domain; the backend owns its own
-        domain transform (FlInt keying for flint/integer modes).
+        Compatibility wrapper over the partials/finalize split: for the
+        deterministic modes this is ``finalize_partials(predict_partials(X))``
+        — one shared numpy finalize, so scores cannot diverge across
+        backends.  Backends with non-deterministic modes (float) override.
         """
+        from repro.core.ensemble import finalize_partials
+
+        if not self.deterministic:
+            raise NotImplementedError(
+                f"backend {self.name!r} must override predict_scores for "
+                f"the non-deterministic mode {self.mode!r}"
+            )
+        acc = self.predict_partials(X)
+        return finalize_partials(self.mode, acc, self.packed.n_trees,
+                                 self.packed.scale)
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         return f"<{type(self).__name__} mode={self.mode!r}>"

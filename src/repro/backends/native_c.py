@@ -13,11 +13,16 @@ Two concrete backends ride on it:
     data-as-arrays table walk of ``codegen/table_emitter.emit_table_walk_c``.
 
 Shape-oblivious: the C loops take any row count, so ``compiles_per_shape`` is
-False and the serving layer skips bucket padding entirely.  In integer mode
-the C accumulates uint32 at the same scale and in the same tree order as the
-reference, so scores are bit-identical; in flint/float modes gcc (without
--ffast-math) preserves the emitted float32 operation order, matching the
-XLA scan's sequential per-tree adds.
+False and the serving layer skips bucket padding entirely.  Since the
+partials/finalize split, both deterministic modes (flint/integer) compile the
+*integer* translation unit: the C accumulates uint32 partials at the same
+scale and in the same tree order as the reference — exact, associative, and
+mergeable across tree shards — and the shared numpy finalize
+(``repro.core.ensemble.finalize_partials``) turns them into mode-typed
+scores, so bit-identity needs no compiler float guarantees at all.  Float
+mode still compiles the float32 translation unit; gcc (without -ffast-math)
+preserves the emitted operation order, matching the XLA scan's sequential
+per-tree adds.
 """
 from __future__ import annotations
 
@@ -63,6 +68,14 @@ class CompiledCBackend(TreeBackend):
     def _emit_source(self) -> str:
         raise NotImplementedError
 
+    @property
+    def _exec_mode(self) -> str:
+        """The mode the compiled translation unit executes.  Deterministic
+        modes (flint/integer) both run the integer accumulation — the library
+        produces uint32 partials and finalize happens in shared numpy — so
+        one emitted source serves both."""
+        return "float" if self.mode == "float" else "integer"
+
     # ------------------------------------------------------------- compile
     def _ensure_lib(self):
         # double-checked locking: engines are shared across executor threads,
@@ -96,8 +109,9 @@ class CompiledCBackend(TreeBackend):
                 + proc.stderr.decode(errors="replace")[:2000]
             )
         lib = ctypes.CDLL(str(so_file))  # RTLD_LOCAL: symbols stay per-model
-        data_ct = ctypes.c_float if self.mode == "float" else ctypes.c_int32
-        score_ct = ctypes.c_uint32 if self.mode == "integer" else ctypes.c_float
+        exec_mode = self._exec_mode
+        data_ct = ctypes.c_float if exec_mode == "float" else ctypes.c_int32
+        score_ct = ctypes.c_uint32 if exec_mode == "integer" else ctypes.c_float
         lib.predict_batch.restype = None
         lib.predict_batch.argtypes = [
             ctypes.POINTER(data_ct),
@@ -105,19 +119,20 @@ class CompiledCBackend(TreeBackend):
             ctypes.POINTER(score_ct),
             ctypes.POINTER(ctypes.c_int32),
         ]
-        self._score_dtype = np.uint32 if self.mode == "integer" else np.float32
+        self._score_dtype = np.uint32 if exec_mode == "integer" else np.float32
         self._lib = lib
         return lib
 
     # ------------------------------------------------------------- predict
-    def predict_scores(self, X):
+    def _run_batch(self, X):
+        """One ``predict_batch`` call: (exec-mode scores, C-side preds)."""
         lib = self._ensure_lib()
         X = np.ascontiguousarray(np.asarray(X, np.float32))
         if X.ndim != 2 or X.shape[1] != self.packed.n_features:
             raise ValueError(
                 f"expected (B, {self.packed.n_features}) features, got {X.shape}"
             )
-        if self.mode == "float":
+        if self._exec_mode == "float":
             data = X
         else:
             data = np.ascontiguousarray(float_to_key_np(X))
@@ -131,6 +146,17 @@ class CompiledCBackend(TreeBackend):
             preds.ctypes.data_as(lib.predict_batch.argtypes[3]),
         )
         return scores, preds
+
+    def predict_partials(self, X):
+        if not self.deterministic:
+            return super().predict_partials(X)  # raises with the shared message
+        scores, _ = self._run_batch(X)  # integer exec: scores ARE the partials
+        return scores
+
+    def predict_scores(self, X):
+        if self.deterministic:
+            return super().predict_scores(X)  # shared finalize(partials)
+        return self._run_batch(X)
 
 
 @register_backend
@@ -153,6 +179,6 @@ class NativeCBackend(CompiledCBackend):
     def _emit_source(self) -> str:
         from repro.codegen.c_emitter import emit_batch_entry, emit_c
 
-        return emit_c(self.packed, mode=self.mode) + emit_batch_entry(
-            self.packed, mode=self.mode
+        return emit_c(self.packed, mode=self._exec_mode) + emit_batch_entry(
+            self.packed, mode=self._exec_mode
         )

@@ -18,8 +18,11 @@ trip count — tree-major memory order, branch-free inner loop, vectorizable.
 ``block_rows=1`` keeps the scalar per-row while-loop walk (the baseline the
 blocked variant is benchmarked against in ``backend_matrix``).
 
-Deterministic modes only (integer + flint): thresholds stay FlInt int32 keys,
-so scores are bit-identical to every other backend — the conformance suite
+Deterministic modes only (integer + flint), and since the partials/finalize
+split both compile the *same* integer translation unit: the library emits
+uint32 partial accumulators (``predict_partials``) and the shared numpy
+finalize produces the mode's scores.  Thresholds stay FlInt int32 keys, so
+partials are bit-identical to every other backend — the conformance suite
 holds across the layout axis AND every block size, since blocking only
 reorders *which rows* walk when, never any row's own accumulation order.
 """
@@ -55,9 +58,10 @@ class NativeCTableBackend(CompiledCBackend):
         from repro.codegen.c_emitter import emit_batch_entry
         from repro.codegen.table_emitter import emit_table_walk_c
 
+        mode = self._exec_mode  # flint and integer share the integer unit
         if self.block_rows == 1:  # scalar per-row walk, the pre-blocking path
-            return emit_table_walk_c(self.packed, mode=self.mode) + \
-                emit_batch_entry(self.packed, mode=self.mode)
+            return emit_table_walk_c(self.packed, mode=mode) + \
+                emit_batch_entry(self.packed, mode=mode)
         return emit_table_walk_c(
-            self.packed, mode=self.mode, block_rows=self.block_rows
+            self.packed, mode=mode, block_rows=self.block_rows
         )

@@ -12,14 +12,21 @@ gathers.  ``impl="auto"`` (the default) resolves per layout: linear scan on
 ``leaf_major`` tables, the per-level ``gather`` walk on ``padded`` ones —
 i.e. pinning ``layout="padded"`` falls back to padded+gather untouched.
 
-The kernel implements exactly the paper's integer path (int32 FlInt compares,
-uint32 fixed-point accumulation), so ``modes == ("integer",)``; uint32
-addition is associative mod 2^32, which is why the tiled accumulation is
-bit-identical to the reference walk no matter how the grid is carved.
+The kernel implements exactly the paper's integer accumulation (int32 FlInt
+compares, uint32 fixed-point adds) — which, since the partials/finalize
+split, is the *whole* deterministic-mode story: the kernel produces the
+uint32 partial accumulators and the shared finalize turns them into scores.
+``flint`` therefore rides the same kernel (its finalize is one reciprocal
+multiply), so ``modes == ("flint", "integer")``.  uint32 addition is
+associative mod 2^32, which is why the tiled accumulation is bit-identical
+to the reference walk no matter how the grid is carved — and why a
+tree-parallel plan can merge per-shard kernel partials bit-exactly.
 """
 from __future__ import annotations
 
 from typing import Optional
+
+import numpy as np
 
 from repro.backends.base import BackendCapabilities, TreeBackend, register_backend
 from repro.core.packing import PackedEnsemble
@@ -31,8 +38,8 @@ _DEFAULT_BLOCK_B = 256  # the kernel wrapper's row-tile default
 class PallasBackend(TreeBackend):
     name = "pallas"
     capabilities = BackendCapabilities(
-        modes=("integer",),
-        deterministic_modes=("integer",),
+        modes=("flint", "integer"),
+        deterministic_modes=("flint", "integer"),
         preferred_block_rows=_DEFAULT_BLOCK_B,
         compiles_per_shape=True,
         # the kernel consumes dense (T, N) VMEM-resident tables, so both
@@ -66,7 +73,8 @@ class PallasBackend(TreeBackend):
             block_b=block_b, block_t=block_t, impl=impl, interpret=interpret
         )
 
-    def predict_scores(self, X):
+    def predict_partials(self, X):
         from repro.kernels.ops import packed_predict_integer
 
-        return packed_predict_integer(self.packed, X, **self._kernel_kwargs)
+        acc, _ = packed_predict_integer(self.packed, X, **self._kernel_kwargs)
+        return np.asarray(acc)

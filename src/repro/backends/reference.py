@@ -1,15 +1,18 @@
 """ReferenceBackend: the pure-jnp breadth-batched node-table walk.
 
-This is the semantic oracle: one jitted predict per (model, mode), built from
-the shared mode spec in ``repro.core.ensemble``.  Every other backend's
-flint/integer output is defined as "bit-identical to this".
+This is the semantic oracle: one jitted accumulate per (model, mode), built
+from the shared mode spec in ``repro.core.ensemble``.  Every other backend's
+flint/integer output is defined as "bit-identical to this".  Deterministic
+modes run through the partials/finalize split (jitted uint32 accumulation,
+shared numpy finalize); the float mode keeps its fused jitted predict.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.backends.base import BackendCapabilities, TreeBackend, register_backend
-from repro.core.ensemble import MODES, make_predict_fn
+from repro.core.ensemble import MODES, make_partials_fn, make_predict_fn
 from repro.core.packing import PackedEnsemble
 
 
@@ -29,7 +32,17 @@ class ReferenceBackend(TreeBackend):
 
     def __init__(self, packed: PackedEnsemble, mode: str = "integer"):
         super().__init__(packed, mode)
-        self._fn = make_predict_fn(packed, mode)
+        if self.deterministic:
+            self._partials_fn = make_partials_fn(packed, mode)
+        else:
+            self._fn = make_predict_fn(packed, mode)
+
+    def predict_partials(self, X):
+        if not self.deterministic:
+            return super().predict_partials(X)  # raises with the shared message
+        return np.asarray(self._partials_fn(jnp.asarray(X, jnp.float32)))
 
     def predict_scores(self, X):
+        if self.deterministic:
+            return super().predict_scores(X)  # finalize(partials)
         return self._fn(jnp.asarray(X, jnp.float32))

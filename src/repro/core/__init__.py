@@ -7,13 +7,17 @@ from repro.core.ensemble import (
     MODES,
     ModeSpec,
     ensemble_device_arrays,
+    finalize_partials,
+    flint_recip,
     integer_probs,
+    make_partials_fn,
     make_predict_fn,
     mode_spec,
     predict_flint,
     predict_float,
     predict_integer,
     predict_mode,
+    predict_partials_mode,
 )
 from repro.core.fixedpoint import fixed_to_prob, max_abs_error, prob_to_fixed_np, scale_for
 from repro.core.flint import float_to_key, float_to_key_np, key_to_float, key_to_float_np
@@ -23,10 +27,14 @@ __all__ = [
     "MODES",
     "ModeSpec",
     "ensemble_device_arrays",
+    "finalize_partials",
+    "flint_recip",
     "integer_probs",
+    "make_partials_fn",
     "make_predict_fn",
     "mode_spec",
     "predict_mode",
+    "predict_partials_mode",
     "predict_flint",
     "predict_float",
     "predict_integer",

@@ -3,8 +3,28 @@
 Mirrors the paper's three evaluated implementations (Sec. IV):
   * ``float``   — float32 threshold compares, float32 probability adds
                   (the "naive" Listing 4 baseline),
-  * ``flint``   — int32 key compares, float32 probability adds (FlInt [26]),
+  * ``flint``   — int32 key compares, exact uint32 fixed-point adds, float
+                  probabilities recovered by one reciprocal multiply at
+                  finalize (FlInt [26] keying; see the deviation note below),
   * ``integer`` — int32 key compares, uint32 fixed-point adds (InTreeger).
+
+Partials vs finalize (the execution-plan split): inference is factored into
+*accumulation* — walk every tree, sum its leaf contribution — and *finalize* —
+turn the accumulator into scores (reciprocal-multiply averaging) and argmax
+predictions.  For the deterministic modes the accumulator is a uint32
+fixed-point partial sum, which is associative mod 2^32: a forest can be carved
+into tree-contiguous sub-forests (``ForestIR.subset``), each shard's partials
+computed on a different backend or device, and the merged sum is *bit-identical*
+to the single-shard walk.  ``repro.plan`` builds on exactly this property.
+
+Deviation (documented): the paper's FlInt variant accumulates float32
+probabilities.  Float addition is not associative, so float partial sums
+cannot be merged across shards without rounding drift.  Our ``flint`` mode
+therefore accumulates the same exact uint32 fixed-point partials as
+``integer`` and recovers float probabilities with a single precomputed
+reciprocal multiply in finalize — int32 compares stay FlInt's, scores stay
+float, and sharded execution stays bit-exact.  The float-accumulating FlInt C
+is still emitted/benchmarked by ``codegen`` (``emit_c(mode="flint")``).
 
 On TPU the if-else cascade becomes a breadth-batched node-table walk: every
 example advances one level per step via vectorized gathers; leaves self-loop.
@@ -21,11 +41,28 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.fixedpoint import fixed_to_prob
+from repro.core.fixedpoint import fixed_to_prob, scale_for
 from repro.core.flint import float_to_key
 from repro.core.packing import PackedEnsemble
 
 MODES = ("float", "flint", "integer")
+
+
+def flint_recip(n_trees: int, scale: int = None) -> np.float32:
+    """The precomputed reciprocal that turns a uint32 fixed-point accumulator
+    into ensemble-average probabilities: ``1 / (scale * n)`` as float32.
+    Computed once in float64 (codegen-time division, paper Sec. III-A)."""
+    s = scale_for(n_trees) if scale is None else int(scale)
+    return np.float32(1.0 / (float(s) * float(n_trees)))
+
+
+def _finalize_flint(acc, n_trees, scale=None):
+    """uint32 partials -> float32 probabilities via one reciprocal multiply.
+
+    Works on numpy and jnp accumulators alike; uint32 -> float32 conversion
+    is IEEE round-to-nearest in both, so the two paths are bit-identical.
+    """
+    return acc.astype(np.float32) * flint_recip(n_trees, scale)
 
 
 @dataclass(frozen=True)
@@ -35,16 +72,23 @@ class ModeSpec:
     The traversal itself (:func:`_predict`) is mode-oblivious; a mode is just
       * ``domain_transform`` — float32 features -> the threshold-compare
         domain (identity for ``float``, FlInt int32 keys otherwise),
-      * ``acc_dtype``        — the leaf-accumulator dtype,
-      * ``finalize``         — ``(acc, n_trees) -> scores`` (ensemble-average
-        for the float-accumulating modes, identity for fixed-point),
-      * ``deterministic``    — True when outputs are bit-deterministic given
-        the row's FlInt keys (flint/integer), which is what makes gateway
-        caching and cross-backend bit-identity sound.
+      * ``acc_dtype``        — the accumulator dtype (uint32 fixed-point for
+        the deterministic modes, float32 for ``float``),
+      * ``leaf_field``       — which quantized leaf table accumulates
+        (``leaf_fixed`` for uint32 partials, ``leaf_probs`` for float),
+      * ``finalize``         — the standalone ``(acc, n_trees, scale) ->
+        scores`` step (reciprocal-multiply averaging for ``flint``/``float``,
+        identity for ``integer``); argmax over the finalized scores yields
+        predictions,
+      * ``deterministic``    — True when the accumulator is an exact integer
+        partial sum (flint/integer): bit-deterministic given the row's FlInt
+        keys, mergeable across tree shards with zero precision loss, and what
+        makes gateway caching and cross-backend bit-identity sound.
     """
 
     name: str
     acc_dtype: Any
+    leaf_field: str
     domain_transform: Callable
     finalize: Callable
     deterministic: bool
@@ -54,22 +98,25 @@ _MODE_SPECS = {
     "float": ModeSpec(
         name="float",
         acc_dtype=jnp.float32,
+        leaf_field="leaf_probs",
         domain_transform=lambda x: x,
-        finalize=lambda acc, n: acc / n,
+        finalize=lambda acc, n, scale=None: acc / n,
         deterministic=False,
     ),
     "flint": ModeSpec(
         name="flint",
-        acc_dtype=jnp.float32,
+        acc_dtype=jnp.uint32,
+        leaf_field="leaf_fixed",
         domain_transform=float_to_key,
-        finalize=lambda acc, n: acc / n,
+        finalize=_finalize_flint,
         deterministic=True,
     ),
     "integer": ModeSpec(
         name="integer",
         acc_dtype=jnp.uint32,
+        leaf_field="leaf_fixed",
         domain_transform=float_to_key,
-        finalize=lambda acc, n: acc,
+        finalize=lambda acc, n, scale=None: acc,
         deterministic=True,
     ),
 }
@@ -82,9 +129,27 @@ def mode_spec(mode: str) -> ModeSpec:
         raise ValueError(f"unknown mode {mode!r}; have {MODES}") from None
 
 
+def finalize_partials(mode: str, acc, n_trees: int, scale: int = None):
+    """The standalone finalize step over integer partials, in numpy.
+
+    ``acc`` is the (B, C) uint32 partial accumulator of a *full* forest;
+    ``n_trees``/``scale`` are the full ensemble's (a sub-forest's partials
+    must be merged before finalizing — see ``repro.plan``).  Returns
+    ``(scores, preds)`` with the mode's score dtype.  Every backend and every
+    execution plan funnels through this one implementation, so flint/integer
+    scores cannot diverge across routes by construction.
+    """
+    spec = mode_spec(mode)
+    if not spec.deterministic:
+        raise ValueError(f"mode {mode!r} has no integer partials to finalize")
+    acc = np.asarray(acc)
+    scores = spec.finalize(acc, n_trees, scale)
+    return scores, np.argmax(scores, axis=1).astype(np.int32)
+
+
 def ensemble_device_arrays(packed: PackedEnsemble, mode: str) -> dict:
     """The deployment artifact for one mode, as a dict of jnp arrays."""
-    mode_spec(mode)  # validate the name
+    spec = mode_spec(mode)
     base = dict(
         feature=jnp.asarray(packed.feature),
         left=jnp.asarray(packed.left),
@@ -92,13 +157,9 @@ def ensemble_device_arrays(packed: PackedEnsemble, mode: str) -> dict:
     )
     if mode == "float":
         base["threshold"] = jnp.asarray(packed.threshold)
-        base["leaf"] = jnp.asarray(packed.leaf_probs)
-    elif mode == "flint":
-        base["threshold"] = jnp.asarray(packed.threshold_key)
-        base["leaf"] = jnp.asarray(packed.leaf_probs)
     else:
         base["threshold"] = jnp.asarray(packed.threshold_key)
-        base["leaf"] = jnp.asarray(packed.leaf_fixed)
+    base["leaf"] = jnp.asarray(getattr(packed, spec.leaf_field))
     return base
 
 
@@ -143,6 +204,21 @@ def _predict(arrays, x, depth: int, acc_dtype):
     return acc
 
 
+def predict_partials_mode(packed: PackedEnsemble, X, mode: str, arrays=None):
+    """Accumulate only: (B, C) uint32 partials for a deterministic mode.
+
+    This is the shard-level quantity — partials of tree-contiguous sub-forests
+    sum (uint32, associative) to the full forest's partials bit-exactly.
+    """
+    spec = mode_spec(mode)
+    if not spec.deterministic:
+        raise ValueError(f"mode {mode!r} does not produce integer partials")
+    if arrays is None:
+        arrays = ensemble_device_arrays(packed, mode)
+    dom = spec.domain_transform(jnp.asarray(X, jnp.float32))
+    return _predict(arrays, dom, packed.max_depth, spec.acc_dtype)
+
+
 def predict_mode(packed: PackedEnsemble, X, mode: str, arrays=None):
     """The one parametrized inference path: ``(scores, preds)`` for any mode.
 
@@ -156,7 +232,7 @@ def predict_mode(packed: PackedEnsemble, X, mode: str, arrays=None):
         arrays = ensemble_device_arrays(packed, mode)
     dom = spec.domain_transform(jnp.asarray(X, jnp.float32))
     acc = _predict(arrays, dom, packed.max_depth, spec.acc_dtype)
-    scores = spec.finalize(acc, packed.n_trees)
+    scores = spec.finalize(acc, packed.n_trees, packed.scale)
     return scores, jnp.argmax(scores, axis=1).astype(jnp.int32)
 
 
@@ -166,7 +242,8 @@ def predict_float(packed: PackedEnsemble, X, arrays=None):
 
 
 def predict_flint(packed: PackedEnsemble, X, arrays=None):
-    """FlInt path: integer compares, float prob accumulation."""
+    """FlInt-keyed path: integer compares, exact integer partials, float
+    probabilities via the finalize reciprocal multiply."""
     return predict_mode(packed, X, "flint", arrays)
 
 
@@ -180,17 +257,34 @@ def integer_probs(packed: PackedEnsemble, acc):
     return fixed_to_prob(acc, packed.n_trees)
 
 
+def make_partials_fn(packed: PackedEnsemble, mode: str):
+    """Close over device arrays; return a jitted ``X -> uint32 partials`` fn
+    (deterministic modes only) — the backend-side half of the plan split."""
+    spec = mode_spec(mode)
+    if not spec.deterministic:
+        raise ValueError(f"mode {mode!r} does not produce integer partials")
+    arrays = ensemble_device_arrays(packed, mode)
+    depth = packed.max_depth
+
+    def fn(x):
+        dom = spec.domain_transform(jnp.asarray(x, jnp.float32))
+        return _predict(arrays, dom, depth, spec.acc_dtype)
+
+    return jax.jit(fn)
+
+
 def make_predict_fn(packed: PackedEnsemble, mode: str):
     """Close over device arrays; return a jitted X -> (scores, preds) fn."""
     spec = mode_spec(mode)
     arrays = ensemble_device_arrays(packed, mode)
     depth = packed.max_depth
     n = packed.n_trees
+    scale = packed.scale
 
     def fn(x):
         dom = spec.domain_transform(jnp.asarray(x, jnp.float32))
         acc = _predict(arrays, dom, depth, spec.acc_dtype)
-        scores = spec.finalize(acc, n)
+        scores = spec.finalize(acc, n, scale)
         return scores, jnp.argmax(scores, axis=1).astype(jnp.int32)
 
     return jax.jit(fn)

@@ -43,6 +43,9 @@ class PackedEnsemble:
     # are, the per-tree real node counts padding erased, and a back-reference
     # to the canonical IR so other layouts can be materialized on demand.
     layout: str = "padded"
+    # sub-forest artifacts (ForestIR.subset): the scale the leaves were
+    # quantized at — the parent ensemble's, not scale_for(n_trees)
+    quant_scale: Optional[int] = field(default=None, repr=False)
     node_counts: Optional[np.ndarray] = field(default=None, repr=False)
     # leaf_major only: per-tree internal-node counts (T,).  In that layout a
     # tree's nodes are permuted internal-first, so indices [0, internal_counts
@@ -53,7 +56,8 @@ class PackedEnsemble:
 
     @property
     def scale(self) -> int:
-        return scale_for(self.n_trees)
+        return self.quant_scale if self.quant_scale is not None \
+            else scale_for(self.n_trees)
 
     def to_ir(self):
         """The canonical IR behind these tables (recovered if not attached)."""

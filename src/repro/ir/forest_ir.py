@@ -18,6 +18,7 @@ cost ``sum(n_nodes)`` nodes, not ``T * max(n_nodes)``.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from typing import Optional
 
 import numpy as np
 
@@ -61,6 +62,11 @@ class ForestIR:
     n_trees: int
     n_classes: int
     n_features: int
+    # set on sub-forest IRs (see :meth:`subset`): the fixed-point scale the
+    # leaves were quantized at — the *parent ensemble's* scale, not
+    # scale_for(n_trees) of the subset.  None means "this IR is a whole
+    # ensemble" and the scale is derived from n_trees.
+    quant_scale: Optional[int] = None
     _layouts: dict = field(default_factory=dict, repr=False, compare=False)
 
     # ------------------------------------------------------------ properties
@@ -84,7 +90,11 @@ class ForestIR:
 
     @property
     def scale(self) -> int:
-        return scale_for(self.n_trees)
+        """The fixed-point scale ``leaf_fixed`` is quantized at.  For a
+        sub-forest carved by :meth:`subset` this is the parent ensemble's
+        scale — leaves are sliced, never requantized."""
+        return self.quant_scale if self.quant_scale is not None \
+            else scale_for(self.n_trees)
 
     # --------------------------------------------------------- constructors
     @classmethod
@@ -175,6 +185,53 @@ class ForestIR:
             n_trees=packed.n_trees,
             n_classes=packed.n_classes,
             n_features=packed.n_features,
+            quant_scale=getattr(packed, "quant_scale", None),
+        )
+
+    # ------------------------------------------------------------- sharding
+    def subset(self, start: int, stop: int = None) -> "ForestIR":
+        """Carve the tree-contiguous sub-forest ``[start, stop)`` — no
+        requantization, ever.
+
+        Node arrays are pure slices of the parent's (CSR storage makes a tree
+        range one contiguous node range), so the subset's FlInt keys and
+        fixed-point leaves are bit-identical to the parent's by construction.
+        The parent's quantization scale is carried along (``quant_scale``):
+        a sub-forest's leaves stay at ``scale_for(parent.n_trees)``, which is
+        exactly what makes per-shard uint32 partial sums mergeable into the
+        full forest's accumulator with zero precision loss (the execution-plan
+        layer's core invariant — see ``repro.plan``).
+
+        Accepts ``subset(slice)`` or ``subset(start, stop)``.
+        """
+        if isinstance(start, slice):
+            if start.step not in (None, 1):
+                raise ValueError("tree subsets must be contiguous (step 1)")
+            start, stop = start.indices(self.n_trees)[:2]
+        if stop is None:
+            raise ValueError("subset needs (start, stop) or a slice")
+        start, stop = int(start), int(stop)
+        if not (0 <= start < stop <= self.n_trees):
+            raise ValueError(
+                f"tree range [{start}, {stop}) out of bounds for "
+                f"{self.n_trees} trees"
+            )
+        lo, hi = int(self.node_offsets[start]), int(self.node_offsets[stop])
+        sl = slice(lo, hi)
+        return ForestIR(
+            feature=self.feature[sl],
+            threshold=self.threshold[sl],
+            threshold_key=self.threshold_key[sl],
+            left=self.left[sl],
+            right=self.right[sl],
+            leaf_probs=self.leaf_probs[sl],
+            leaf_fixed=self.leaf_fixed[sl],
+            node_offsets=self.node_offsets[start:stop + 1] - lo,
+            tree_depths=self.tree_depths[start:stop],
+            n_trees=stop - start,
+            n_classes=self.n_classes,
+            n_features=self.n_features,
+            quant_scale=self.scale,
         )
 
     # ------------------------------------------------------- materialization

@@ -108,6 +108,7 @@ def _padded_tables(ir, order=None):
         n_classes=C,
         n_features=ir.n_features,
         max_depth=ir.max_depth,
+        quant_scale=ir.quant_scale,
         node_counts=counts.copy(),
         ir=ir,
     )
@@ -192,11 +193,14 @@ class RaggedEnsemble:
     n_features: int
     max_depth: int
     layout: str = "ragged"
+    # sub-forest artifacts: the parent ensemble's quantization scale
+    quant_scale: int = field(default=None, repr=False)
     ir: object = field(default=None, repr=False, compare=False)
 
     @property
     def scale(self) -> int:
-        return scale_for(self.n_trees)
+        return self.quant_scale if self.quant_scale is not None \
+            else scale_for(self.n_trees)
 
     @property
     def total_nodes(self) -> int:
@@ -241,5 +245,6 @@ def ragged_layout(ir):
         n_classes=ir.n_classes,
         n_features=ir.n_features,
         max_depth=ir.max_depth,
+        quant_scale=ir.quant_scale,
         ir=ir,
     )

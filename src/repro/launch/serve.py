@@ -15,10 +15,12 @@ Three modes, matching the paper's end-to-end story adapted to a serving stack:
     hot-swap of one model to a new version.  Requests flow
     ``Gateway.submit → QuantizedKeyCache → MicroBatcher (coalesce to
     block-shaped batches under a latency deadline, with admission control)
-    → ModelRegistry → TreeEngine (shape-bucketed, over the ``--gw-backend``
-    execution backend)``, and the run ends with a per-model metrics table
-    (throughput, p50/p95/p99 latency, batch occupancy, cache hit rate) plus
-    a bit-identity check of gateway outputs against direct
+    → ModelRegistry → TreeEngine (shape-bucketed, over the ``--gw-plan``
+    execution plan and ``--gw-backend`` backend; ``--gw-shards`` carves the
+    forest tree-parallel or the batch row-parallel with bit-identical
+    outputs)``, and the run ends with a per-model metrics table (throughput,
+    p50/p95/p99 latency, batch occupancy, cache hit rate, per-shard
+    timings) plus a bit-identity check of gateway outputs against direct
     ``TreeEngine.predict_scores``.
   * LM mode: load a smoke config and run batched prefill+decode generation.
 
@@ -172,6 +174,8 @@ def serve_gateway(args):
         )
     bk = ({"block_rows": args.gw_block_rows}
           if args.gw_block_rows is not None else None)
+    route = dict(backend=args.gw_backend, layout=args.gw_layout,
+                 backend_kwargs=bk, plan=args.gw_plan, shards=args.gw_shards)
 
     registry = ModelRegistry()
     t0 = time.time()
@@ -180,32 +184,29 @@ def serve_gateway(args):
     gateway = Gateway(
         registry,
         mode=args.gw_mode,
-        backend=args.gw_backend,
-        layout=args.gw_layout,
-        backend_kwargs=bk,
         max_batch_rows=args.gw_batch_rows,
         max_delay_ms=args.gw_max_delay_ms,
         max_queue_rows=args.gw_queue_rows,
+        **route,
     )
 
-    # warm every (model, bucket) pair so compiles don't pollute latency stats
+    # warm every (model, bucket) pair — through the plan, so every shard of a
+    # tree-/row-parallel route pre-compiles — so compiles don't pollute
+    # latency stats
     t0 = time.time()
     for mid in registry.ids():
-        registry.get(mid).engine(
-            args.gw_mode, backend=args.gw_backend, layout=args.gw_layout,
-            backend_kwargs=bk,
-        ).warm(args.gw_batch_rows)
-    print(f"warmed shape buckets in {time.time()-t0:.1f}s")
+        eng = registry.get(mid).engine(args.gw_mode, **route)
+        eng.warm(args.gw_batch_rows)
+    print(f"warmed shape buckets in {time.time()-t0:.1f}s "
+          f"(plan={eng.plan_name}, shards={eng.n_shards})")
 
     def _do_swap(gw):
         mv = gw.registry.register_forest(
             "shuttle-rf",
             RandomForestClassifier(n_estimators=28, max_depth=6, seed=9).fit(Xtr, ytr),
         )
-        # warm the new version too
-        mv.engine(
-            args.gw_mode, backend=args.gw_backend, layout=args.gw_layout
-        ).warm(args.gw_batch_rows)
+        # warm the new version too (every shard of its plan)
+        mv.engine(args.gw_mode, **route).warm(args.gw_batch_rows)
         print(f"  hot-swapped shuttle-rf -> v{mv.version} under live traffic")
 
     swap_done = []
@@ -234,7 +235,7 @@ def serve_gateway(args):
             X = pools[mid][:48]
             g_scores, g_preds = await gateway.submit(mid, X)
             d_scores, d_preds = registry.get(mid).engine(
-                args.gw_mode, backend=args.gw_backend, layout=args.gw_layout
+                args.gw_mode, **route
             ).predict_scores(X)
             ok &= bool((g_scores == d_scores).all() and (g_preds == d_preds).all())
         print(f"gateway == direct engine (bit-identical): {ok}")
@@ -294,6 +295,17 @@ def main(argv=None):
                     help="rows in flight per tree for the table-walk C "
                          "backend (1 = scalar walk; default: the backend's "
                          "preferred_block_rows)")
+    from repro.plan import available_plans
+
+    ap.add_argument("--gw-plan", default=None,
+                    choices=tuple(available_plans()) + ("auto",),
+                    help="execution plan behind the gateway (default: "
+                         "single-shard; 'auto' selects by capability from "
+                         "--gw-shards and the mode)")
+    ap.add_argument("--gw-shards", type=int, default=None,
+                    help="shard count for tree-/row-parallel plans (trees "
+                         "are carved via ForestIR.subset; partial integer "
+                         "scores merge bit-exactly)")
     ap.add_argument("--arch", default="granite-3-2b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)

@@ -1,0 +1,40 @@
+"""Sharded execution plans: engine -> plan -> backend partials -> merge ->
+finalize.
+
+The paper's integer-only accumulation makes ensemble aggregation an exact,
+associative uint32 sum, so a forest can be split across devices or across
+*different backends* and the partial scores merged with zero precision loss —
+something float ensembles cannot guarantee.  This package is that property as
+an architecture layer: plans carve the forest (``ForestIR.subset`` tree
+shards) or the batch (row shards), drive ``TreeBackend.predict_partials`` on
+each piece, merge, and run the standalone finalize step exactly once.  Every
+plan is bit-identical to single-shard execution in the deterministic modes —
+``make conformance`` (``tests/test_plans.py``) enforces it across the full
+(plan, backend, layout) cross.
+"""
+from repro.plan.base import (
+    ExecutionPlan,
+    available_plans,
+    build_backend,
+    create_plan,
+    plan_class,
+    register_plan,
+    select_plan,
+)
+from repro.plan.row_parallel import RowParallelPlan
+from repro.plan.single import SingleShardPlan
+from repro.plan.tree_parallel import TreeParallelPlan, tree_ranges
+
+__all__ = [
+    "ExecutionPlan",
+    "RowParallelPlan",
+    "SingleShardPlan",
+    "TreeParallelPlan",
+    "available_plans",
+    "build_backend",
+    "create_plan",
+    "plan_class",
+    "register_plan",
+    "select_plan",
+    "tree_ranges",
+]

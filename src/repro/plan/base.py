@@ -1,0 +1,261 @@
+"""The ExecutionPlan protocol and the name-keyed plan registry.
+
+A plan sits between the serving engine and the backend layer and decides how
+one logical forest is *carved* across executors:
+
+    engine -> ExecutionPlan -> backend.predict_partials -> merge -> finalize
+
+The paper's integer-only accumulation is what makes this split sound: the
+deterministic modes (flint/integer) accumulate exact uint32 fixed-point
+partials, and uint32 addition is associative, so a forest can be cut into
+tree-contiguous sub-forests (``ForestIR.subset``), each shard's partials
+computed on a different jax device or a different backend entirely, and the
+merged sum is *bit-identical* to the single-shard walk.  Finalize
+(reciprocal-multiply averaging + argmax, ``repro.core.ensemble.
+finalize_partials``) runs exactly once, on the merged accumulator.
+
+Three registered plans:
+  * ``single``        — today's path: one backend, the whole forest.
+  * ``tree_parallel`` — shard trees across jax devices (``shard_map`` over a
+                        stacked sub-forest table) or across per-shard
+                        backends, possibly heterogeneous; integer merge.
+  * ``row_parallel``  — shard the batch; rows are independent, so this is
+                        bit-exact for *every* mode, float included.
+
+*Adding a plan*: subclass :class:`ExecutionPlan`, set ``name``, implement
+``predict_partials`` (and ``predict_scores`` if the plan serves
+non-deterministic modes), decorate with ``@register_plan``; the serving stack
+picks it up by name (``TreeEngine(..., plan="...", shards=N)``,
+``Gateway(..., plan=...)``, ``--gw-plan``/``--gw-shards``).
+"""
+from __future__ import annotations
+
+import abc
+import threading
+import time
+from typing import ClassVar, Optional
+
+import numpy as np
+
+from repro.core.ensemble import finalize_partials, mode_spec
+
+
+def build_backend(backend, model, mode: str, layout: Optional[str],
+                  backend_kwargs: Optional[dict]):
+    """Resolve one shard's backend: a registered name (materialize the wanted
+    ForestIR layout, then construct) or an already-built instance (then the
+    artifact/mode are taken from it; a conflicting layout pin fails loudly).
+
+    This is THE one place plan code turns (model, backend spec) into an
+    executor — the logic the pre-plan ``TreeEngine`` constructor owned.
+    """
+    from repro.backends import backend_class, create_backend
+    from repro.ir import resolve_artifact
+
+    if isinstance(backend, str):
+        caps = backend_class(backend).capabilities
+        wanted = layout or caps.preferred_layout
+        caps.require_layout(wanted, backend)
+        return create_backend(
+            backend, resolve_artifact(model, wanted), mode=mode,
+            **(backend_kwargs or {})
+        )
+    if layout is not None and getattr(backend, "layout", "padded") != layout:
+        raise ValueError(
+            f"layout {layout!r} conflicts with the constructed "
+            f"backend's artifact (layout {backend.layout!r}); "
+            "materialize the backend on the wanted layout instead"
+        )
+    return backend
+
+
+def as_ir(model):
+    """The canonical ForestIR behind ``model`` (IR or any layout artifact)."""
+    from repro.ir import ForestIR
+
+    if isinstance(model, ForestIR):
+        return model
+    ir = getattr(model, "ir", None)
+    if ir is not None:
+        return ir
+    if hasattr(model, "to_ir"):
+        return model.to_ir()
+    raise ValueError(
+        f"cannot shard a {type(model).__name__!r} artifact: no ForestIR "
+        "back-reference to carve sub-forests from"
+    )
+
+
+class ExecutionPlan(abc.ABC):
+    """How one logical forest is executed: shards, merge, finalize.
+
+    Subclasses own their backends; the engine above sees the same surface a
+    bare backend exposes (``predict_partials``/``predict_scores`` plus the
+    capability aggregates the bucketing layer consults), so a plan composes
+    with shape bucketing, the gateway, and the registry unchanged.
+    """
+
+    name: ClassVar[str]
+
+    def __init__(self, model, *, mode: str = "integer"):
+        self.mode = mode
+        self._spec = mode_spec(mode)
+        # the FULL ensemble's finalize constants — a sub-forest's partials
+        # must be averaged at the whole forest's (n_trees, scale)
+        self._n_trees = getattr(model, "n_trees", None)
+        self._scale = getattr(model, "scale", None)
+        self._timings: dict = {}
+        self._timings_lock = threading.Lock()
+
+    # ------------------------------------------------------------ execution
+    @abc.abstractmethod
+    def predict_partials(self, X):
+        """Float features (B, F) -> merged (B, C) uint32 partials."""
+
+    def predict_scores(self, X):
+        """(scores, preds) via the standalone finalize over merged partials."""
+        if not self.deterministic:
+            raise NotImplementedError(
+                f"plan {self.name!r} must override predict_scores for the "
+                f"non-deterministic mode {self.mode!r}"
+            )
+        acc = self.predict_partials(X)
+        return finalize_partials(self.mode, acc, self._n_trees, self._scale)
+
+    # ------------------------------------------------------- shard metadata
+    @property
+    @abc.abstractmethod
+    def backends(self) -> tuple:
+        """The shard backends (may be empty for fused device execution)."""
+
+    @property
+    @abc.abstractmethod
+    def packed(self):
+        """A metadata-bearing artifact for the full forest (n_features etc)."""
+
+    @property
+    def n_shards(self) -> int:
+        return max(len(self.backends), 1)
+
+    @property
+    def deterministic(self) -> bool:
+        return self._spec.deterministic
+
+    @property
+    def compiles_per_shape(self) -> bool:
+        return any(b.capabilities.compiles_per_shape for b in self.backends)
+
+    @property
+    def preferred_block_rows(self) -> Optional[int]:
+        hints = [b.capabilities.preferred_block_rows for b in self.backends]
+        hints = [h for h in hints if h]
+        return max(hints) if hints else None
+
+    @property
+    def layout(self) -> str:
+        layouts = []
+        for b in self.backends:
+            if b.layout not in layouts:
+                layouts.append(b.layout)
+        return "+".join(layouts) if layouts else "padded"
+
+    @property
+    def backend_name(self) -> str:
+        names = []
+        for b in self.backends:
+            if b.name not in names:
+                names.append(b.name)
+        return "+".join(names) if names else self.name
+
+    def describe(self) -> dict:
+        return {
+            "plan": self.name,
+            "mode": self.mode,
+            "shards": self.n_shards,
+            "backends": [b.name for b in self.backends],
+            "layout": self.layout,
+        }
+
+    # --------------------------------------------------------- shard timing
+    def _record(self, label: str, seconds: float) -> None:
+        with self._timings_lock:
+            ms, calls = self._timings.get(label, (0.0, 0))
+            self._timings[label] = (ms + seconds * 1e3, calls + 1)
+
+    def _timed(self, label: str, fn, *args):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        self._record(label, time.perf_counter() - t0)
+        return out
+
+    def drain_timings(self) -> dict:
+        """Per-shard wall time accumulated since the last drain:
+        ``{label: (ms_total, calls)}``.  The gateway feeds this into
+        ``serve.metrics`` after each batch execute."""
+        with self._timings_lock:
+            out, self._timings = self._timings, {}
+        return out
+
+
+# ---------------------------------------------------------------------------
+# name-keyed registry + capability-driven auto-selection
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict = {}
+
+
+def register_plan(cls):
+    """Class decorator: make ``cls`` constructible via :func:`create_plan`."""
+    if not (isinstance(cls, type) and issubclass(cls, ExecutionPlan)):
+        raise TypeError(f"register_plan expects an ExecutionPlan subclass, got {cls!r}")
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def available_plans() -> list:
+    return sorted(_REGISTRY)
+
+
+def plan_class(name: str):
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown plan {name!r}; available: {available_plans()}"
+        ) from None
+
+
+def select_plan(plan: Optional[str], *, mode: str, backend, shards=None,
+                model=None) -> str:
+    """Capability-driven auto-selection (``plan in (None, "auto")``).
+
+    A sequence of backend names means heterogeneous tree-parallel.  One shard
+    (or none requested) is the single plan.  Multiple shards pick
+    tree-parallel when the mode accumulates exact integer partials and the
+    forest has trees to carve; otherwise row-parallel, which is bit-exact for
+    any mode because rows are independent.
+    """
+    if plan not in (None, "auto"):
+        plan_class(plan)  # fail fast on unknown names
+        return plan
+    if not isinstance(backend, str) and isinstance(backend, (list, tuple)):
+        return "tree_parallel"
+    if shards is None or int(shards) <= 1:
+        return "single"
+    n_trees = getattr(model, "n_trees", None)
+    if mode_spec(mode).deterministic and (n_trees is None or n_trees >= 2):
+        return "tree_parallel"
+    return "row_parallel"
+
+
+def create_plan(name: Optional[str], model, *, mode: str = "integer",
+                backend="reference", shards=None, layout: Optional[str] = None,
+                backend_kwargs: Optional[dict] = None,
+                **plan_kwargs) -> ExecutionPlan:
+    """Instantiate a plan by name (``None``/"auto" -> :func:`select_plan`)."""
+    resolved = select_plan(name, mode=mode, backend=backend, shards=shards,
+                           model=model)
+    return plan_class(resolved)(
+        model, mode=mode, backend=backend, shards=shards, layout=layout,
+        backend_kwargs=backend_kwargs, **plan_kwargs
+    )

@@ -1,0 +1,88 @@
+"""RowParallelPlan: shard the batch, concatenate the results.
+
+Tree traversal is row-independent, so splitting a batch across concurrent
+executions of the same backend artifact changes *nothing* about any row's
+accumulation — row-parallel outputs are bit-identical to single-shard for
+every mode, float included (the one plan that can shard the
+non-deterministic mode).  The shards share one backend instance: jitted JAX
+functions and the compiled-C ctypes entry are both reentrant and release the
+GIL, so chunks genuinely overlap; what row-parallel buys is latency on large
+batches for shape-oblivious backends and multi-core hosts.
+"""
+from __future__ import annotations
+
+from concurrent.futures import ThreadPoolExecutor
+from typing import Optional
+
+import numpy as np
+
+from repro.plan.base import ExecutionPlan, build_backend, register_plan
+
+_DEFAULT_SHARDS = 2
+
+
+@register_plan
+class RowParallelPlan(ExecutionPlan):
+    name = "row_parallel"
+
+    def __init__(self, model, *, mode: str = "integer", backend="reference",
+                 shards=None, layout: Optional[str] = None,
+                 backend_kwargs: Optional[dict] = None):
+        self.backend = build_backend(backend, model, mode, layout, backend_kwargs)
+        super().__init__(self.backend.packed, mode=self.backend.mode)
+        self.shards = int(shards or _DEFAULT_SHARDS)
+        if self.shards < 1:
+            raise ValueError(f"shards must be >= 1, got {shards}")
+        self._pool = ThreadPoolExecutor(
+            max_workers=self.shards, thread_name_prefix="row-shard"
+        )
+
+    # ------------------------------------------------------------ execution
+    def _chunks(self, X):
+        """Contiguous near-equal row chunks; short batches use fewer shards."""
+        X = np.asarray(X, np.float32)
+        return [c for c in np.array_split(X, self.shards) if len(c)]
+
+    def _scatter(self, X, method):
+        chunks = self._chunks(X)
+        futs = [
+            self._pool.submit(self._timed, f"r{i}/{len(chunks)}", method, c)
+            for i, c in enumerate(chunks)
+        ]
+        return [f.result() for f in futs]
+
+    def predict_partials(self, X):
+        if not self.deterministic:
+            raise NotImplementedError(
+                f"mode {self.mode!r} has no integer partials; row_parallel "
+                "serves it through predict_scores"
+            )
+        return np.concatenate(
+            [np.asarray(p) for p in self._scatter(X, self.backend.predict_partials)]
+        )
+
+    def predict_scores(self, X):
+        if self.deterministic:
+            return super().predict_scores(X)  # finalize(concatenated partials)
+        outs = self._scatter(X, self.backend.predict_scores)
+        scores = np.concatenate([np.asarray(s) for s, _ in outs])
+        preds = np.concatenate([np.asarray(p) for _, p in outs])
+        return scores, preds
+
+    # -------------------------------------------------------------- metadata
+    @property
+    def backends(self) -> tuple:
+        return (self.backend,)
+
+    @property
+    def packed(self):
+        return self.backend.packed
+
+    @property
+    def n_shards(self) -> int:
+        return self.shards
+
+    def describe(self) -> dict:
+        d = super().describe()
+        d.update(shards=self.shards)
+        return d

@@ -1,0 +1,43 @@
+"""SingleShardPlan: the whole forest on one backend — today's path.
+
+The degenerate plan, and the conformance baseline every sharded plan must be
+bit-identical to.  It delegates ``predict_scores`` straight to the backend
+(which already funnels deterministic modes through the shared
+partials/finalize split), so routing the engine through plans changes
+nothing for existing callers — including float mode, pre-constructed backend
+instances, and shape-oblivious compiled-C execution.
+"""
+from __future__ import annotations
+
+from repro.plan.base import ExecutionPlan, build_backend, register_plan
+
+
+@register_plan
+class SingleShardPlan(ExecutionPlan):
+    name = "single"
+
+    def __init__(self, model, *, mode: str = "integer", backend="reference",
+                 shards=None, layout=None, backend_kwargs=None):
+        if shards not in (None, 1):
+            raise ValueError(
+                f"the single plan runs exactly one shard, got shards={shards}; "
+                "use plan='tree_parallel' or 'row_parallel' to shard"
+            )
+        self.backend = build_backend(backend, model, mode, layout, backend_kwargs)
+        # an already-constructed backend instance carries its own mode/model
+        super().__init__(self.backend.packed, mode=self.backend.mode)
+        self._label = f"s0:{self.backend.name}"
+
+    @property
+    def backends(self) -> tuple:
+        return (self.backend,)
+
+    @property
+    def packed(self):
+        return self.backend.packed
+
+    def predict_partials(self, X):
+        return self._timed(self._label, self.backend.predict_partials, X)
+
+    def predict_scores(self, X):
+        return self._timed(self._label, self.backend.predict_scores, X)

@@ -3,8 +3,10 @@
 Request path:  client → Gateway.submit → QuantizedKeyCache (per-row probe)
              → MicroBatcher (coalesce to block-shaped batches under a
                latency deadline, admission-controlled) → ModelRegistry
-               (versioned, hot-swappable) → TreeEngine (shape-bucketed
-               jitted execution) → cache fill → response.
+               (versioned, hot-swappable) → TreeEngine (shape-bucketed)
+             → ExecutionPlan (single / tree-parallel / row-parallel shards,
+               exact integer partial merge, one finalize)
+             → TreeBackend → cache fill → response.
 """
 from repro.serve.cache import QuantizedKeyCache, row_keys
 from repro.serve.engine import LMEngine, TreeEngine, bucket_rows

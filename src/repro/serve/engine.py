@@ -4,20 +4,29 @@
 (jitted prefill and decode steps, KV/state cache carried on device).
 
 ``TreeEngine``: the paper's serving path — a thin shape-bucketing wrapper
-over any registered :class:`~repro.backends.TreeBackend` (reference jnp,
-Pallas kernel, or either emitted-C flavor compiled into a shared library),
-mirroring InTreeger's "one model, any hardware" deployment story.  The engine
-is also where the ForestIR pipeline (IR -> layout -> backend) is resolved: it
-materializes the layout the backend prefers (or the caller pins) before
-constructing it, so callers hand over a ForestIR or any artifact and never
-deal in layouts unless they want to.  It is the execution
-layer behind the gateway (``repro.serve.gateway``): for backends that compile
-per shape, incoming batches are padded up to a small set of power-of-two row
-buckets so each (model, mode, backend, bucket) compiles exactly once, no
-matter how ragged the request stream is.  Tree traversal is row-independent,
-so padding rows never perturb real rows — bucketed outputs are bit-identical
-to unbucketed ones.  Shape-oblivious backends (native C) skip padding
-entirely; the engine consults ``backend.capabilities`` for both decisions.
+over one :class:`~repro.plan.ExecutionPlan`, which in turn drives any
+registered :class:`~repro.backends.TreeBackend` (reference jnp, Pallas
+kernel, or either emitted-C flavor compiled into a shared library) on one or
+many forest shards, mirroring InTreeger's "one model, any hardware"
+deployment story.  The execution path is
+
+    engine -> ExecutionPlan -> backend.predict_partials -> merge -> finalize
+
+with the default ``single`` plan reproducing the historical engine->backend
+route exactly; ``plan="tree_parallel"``/``"row_parallel"`` + ``shards=N``
+shard the forest or the batch with bit-identical deterministic-mode outputs.
+The plan layer (via ``repro.plan.build_backend``) is also where the ForestIR
+pipeline (IR -> layout -> backend) is resolved: it materializes the layout
+the backend prefers (or the caller pins) before constructing it, so callers
+hand over a ForestIR or any artifact and never deal in layouts unless they
+want to.  The engine is the execution layer behind the gateway
+(``repro.serve.gateway``): for plans that compile per shape, incoming batches
+are padded up to a small set of power-of-two row buckets so each (model,
+mode, plan, bucket) compiles exactly once, no matter how ragged the request
+stream is.  Tree traversal is row-independent, so padding rows never perturb
+real rows — bucketed outputs are bit-identical to unbucketed ones.
+Shape-oblivious plans (native C, single shard) skip padding entirely; the
+engine consults the plan's aggregated capabilities for both decisions.
 """
 from __future__ import annotations
 
@@ -70,73 +79,92 @@ def bucket_rows(b: int, *, max_bucket: int = 4096) -> int:
 
 
 class TreeEngine:
-    """Shape-bucketing wrapper over one :class:`~repro.backends.TreeBackend`.
+    """Shape-bucketing wrapper over one :class:`~repro.plan.ExecutionPlan`.
 
     ``packed`` is a :class:`~repro.ir.ForestIR` or any materialized layout
-    artifact; ``backend`` is either a registered backend name
-    (``"reference"``, ``"pallas"``, ``"native_c"``, ``"native_c_table"``) or
-    an already-constructed backend instance (then ``packed``/``mode`` are
-    taken from it).  ``layout`` pins a ForestIR layout; by default the
+    artifact; ``backend`` is a registered backend name (``"reference"``,
+    ``"pallas"``, ``"native_c"``, ``"native_c_table"``), a sequence of names
+    (heterogeneous tree-parallel: one per shard, cycled), or an
+    already-constructed backend instance (then ``packed``/``mode`` are taken
+    from it).  ``plan`` selects the execution plan (``"single"`` |
+    ``"tree_parallel"`` | ``"row_parallel"``; ``None``/``"auto"`` picks by
+    capability: one shard -> single, many shards -> tree-parallel for the
+    deterministic modes, row-parallel otherwise) and ``shards`` the shard
+    count.  ``layout`` pins a ForestIR layout; by default each shard
     backend's declared ``preferred_layout`` is materialized (resolution goes
     through the artifact's IR back-reference, so a ``pack_forest`` output can
     feed a ragged-only backend without re-quantizing).  ``predict``/
-    ``predict_scores`` accept any row count; for shape-compiling backends the
+    ``predict_scores`` accept any row count; for shape-compiling plans the
     batch is padded to a :func:`bucket_rows` bucket so each bucket compiles
     once (tracked in ``compiled_buckets``).  ``max_bucket`` defaults to the
-    backend's ``preferred_block_rows`` hint so padded shapes line up with its
-    internal tiling.
+    plan's ``preferred_block_rows`` hint so padded shapes line up with the
+    backends' internal tiling.
     """
 
     def __init__(self, packed=None, *, mode: str = "integer",
                  backend="reference", backend_kwargs: Optional[dict] = None,
-                 max_bucket: Optional[int] = None, layout: Optional[str] = None):
-        from repro.backends import backend_class, create_backend
-        from repro.ir import resolve_artifact
+                 max_bucket: Optional[int] = None, layout: Optional[str] = None,
+                 plan: Optional[str] = None, shards: Optional[int] = None,
+                 plan_kwargs: Optional[dict] = None):
+        from repro.plan import create_plan
 
-        if isinstance(backend, str):
-            caps = backend_class(backend).capabilities
-            wanted = layout or caps.preferred_layout
-            caps.require_layout(wanted, backend)
-            self.backend = create_backend(
-                backend, resolve_artifact(packed, wanted), mode=mode,
-                **(backend_kwargs or {})
-            )
-        else:
-            if layout is not None and getattr(backend, "layout", "padded") != layout:
-                raise ValueError(
-                    f"layout {layout!r} conflicts with the constructed "
-                    f"backend's artifact (layout {backend.layout!r}); "
-                    "materialize the backend on the wanted layout instead"
-                )
-            self.backend = backend
-        self.packed = self.backend.packed
-        self.mode = self.backend.mode
-        caps = self.backend.capabilities
-        self.max_bucket = max_bucket or caps.preferred_block_rows or 4096
+        self.plan = create_plan(
+            plan, packed, mode=mode, backend=backend, shards=shards,
+            layout=layout, backend_kwargs=backend_kwargs,
+            **(plan_kwargs or {})
+        )
+        self.packed = self.plan.packed
+        self.mode = self.plan.mode
+        self.max_bucket = max_bucket or self.plan.preferred_block_rows or 4096
         self.compiled_buckets: set[int] = set()
 
     @property
+    def backend(self):
+        """The (first) shard backend — the whole backend for single/row
+        plans; ``None`` for a fused device-parallel plan (no per-shard
+        backend objects exist)."""
+        backends = self.plan.backends
+        return backends[0] if backends else None
+
+    @property
     def backend_name(self) -> str:
-        return self.backend.name
+        return self.plan.backend_name
+
+    @property
+    def plan_name(self) -> str:
+        return self.plan.name
+
+    @property
+    def n_shards(self) -> int:
+        return self.plan.n_shards
 
     @property
     def layout(self) -> str:
-        """The ForestIR layout the backend is walking."""
-        return self.backend.layout
+        """The ForestIR layout(s) the plan's backends are walking."""
+        return self.plan.layout
 
     @property
     def deterministic(self) -> bool:
         """True when outputs are bit-exact integer scores (cacheable)."""
-        return self.backend.deterministic
+        return self.plan.deterministic
+
+    def drain_shard_timings(self) -> dict:
+        """Per-shard wall time since the last drain (``{label: (ms, calls)}``)
+        — what the gateway records into ``serve.metrics`` per batch."""
+        return self.plan.drain_timings()
 
     def warm(self, max_rows: int) -> None:
         """Pre-compile every bucket any batch of 1..``max_rows`` rows can map
         to: the power-of-two buckets below ``max_bucket``, plus the
-        ``max_bucket``-multiple shapes used once batches reach the cap.  For
-        shape-oblivious backends one call builds the artifact (e.g. compiles
-        the native library) and no further shapes exist."""
+        ``max_bucket``-multiple shapes used once batches reach the cap.
+        Warming goes *through the plan*, so every shard of a multi-shard plan
+        sees exactly the sub-batch shapes real predicts will hand it (chunked
+        rows for row-parallel, full buckets per tree shard) — no shard is
+        left to compile on the first live request.  For shape-oblivious plans
+        one call builds every shard's artifact (e.g. compiles the native
+        libraries) and no further shapes exist."""
         zeros = lambda nb: np.zeros((nb, self.packed.n_features), np.float32)
-        if not self.backend.capabilities.compiles_per_shape:
+        if not self.plan.compiles_per_shape:
             self.predict(zeros(1))
             return
         # `top` is the bucket the largest batch rounds UP to — walking only to
@@ -152,12 +180,12 @@ class TreeEngine:
 
     def padded_rows(self, b: int) -> int:
         """Rows actually executed for a ``b``-row batch: the bucket shape
-        for compiling backends, ``b`` itself for shape-oblivious ones."""
-        if not self.backend.capabilities.compiles_per_shape:
+        for compiling plans, ``b`` itself for shape-oblivious ones."""
+        if not self.plan.compiles_per_shape:
             return b
         return bucket_rows(b, max_bucket=self.max_bucket)
 
-    def _run(self, X):
+    def _pad(self, X):
         X = np.asarray(X, np.float32)
         if X.ndim != 2:
             raise ValueError(f"expected (B, F) features, got shape {X.shape}")
@@ -165,8 +193,12 @@ class TreeEngine:
         nb = self.padded_rows(b)
         if nb != b:
             X = np.concatenate([X, np.zeros((nb - b, X.shape[1]), np.float32)])
-        scores, preds = self.backend.predict_scores(X)
-        if self.backend.capabilities.compiles_per_shape:
+        return X, b, nb
+
+    def _run(self, X):
+        X, b, nb = self._pad(X)
+        scores, preds = self.plan.predict_scores(X)
+        if self.plan.compiles_per_shape:
             # only a predict that actually returned has compiled its bucket
             self.compiled_buckets.add(nb)
         return np.asarray(scores)[:b], np.asarray(preds)[:b]
@@ -177,3 +209,12 @@ class TreeEngine:
 
     def predict_scores(self, X):
         return self._run(X)
+
+    def predict_partials(self, X):
+        """Merged (B, C) uint32 partials through the bucketed path
+        (deterministic modes)."""
+        X, b, nb = self._pad(X)
+        acc = self.plan.predict_partials(X)
+        if self.plan.compiles_per_shape:
+            self.compiled_buckets.add(nb)
+        return np.asarray(acc)[:b]

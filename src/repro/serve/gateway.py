@@ -1,17 +1,20 @@
-"""The serving gateway: cache → micro-batcher → registry → engine.
+"""The serving gateway: cache → micro-batcher → registry → engine → plan.
 
 ``Gateway.submit(model_id, X)`` is the one client entry point.  Per row it
 first probes the :class:`QuantizedKeyCache` (exact FlInt-key match — safe
 because the flint/integer engines are bit-deterministic); rows that miss are
 coalesced by the :class:`MicroBatcher` into block-shaped batches and executed
 on the :class:`TreeEngine` of the model's *current* registry version for the
-gateway's configured ``backend`` and ForestIR ``layout`` (reference / pallas /
-native_c / native_c_table, over padded / ragged / leaf_major — all
+gateway's configured ``backend``, ForestIR ``layout``, and execution ``plan``
+(reference / pallas / native_c / native_c_table, over padded / ragged /
+leaf_major, single-shard or tree-/row-parallel across ``shards`` — all
 bit-identical in the deterministic modes, so cache entries stay keyed on
-(model, version, mode) only and are shared across every route), then inserted
-into the cache.  The response stitches cached and computed rows back
-into request order, so callers always see exactly what a direct
-``TreeEngine.predict_scores`` on their rows would return, bit for bit.
+(model, version, mode) only and are shared across every route and every
+plan), then inserted into the cache.  The response stitches cached and
+computed rows back into request order, so callers always see exactly what a
+direct ``TreeEngine.predict_scores`` on their rows would return, bit for
+bit.  Each batch dispatch also drains the plan's per-shard wall times into
+``serve.metrics`` (``stats()["per_model"][mid]["shards"]``).
 
 Metrics (per-model latency percentiles, throughput, batch occupancy, cache
 hit rate, admission rejects) are recorded on every request — including
@@ -34,8 +37,9 @@ from repro.serve.registry import ModelRegistry
 
 class Gateway:
     def __init__(self, registry: ModelRegistry, *, mode: str = "integer",
-                 backend: str = "reference", layout: str = None,
+                 backend="reference", layout: str = None,
                  backend_kwargs: dict = None,
+                 plan: str = None, shards: int = None,
                  max_batch_rows: int = 256,
                  max_delay_ms: float = 2.0, max_queue_rows: int = 4096,
                  cache_rows: int = 65536):
@@ -46,24 +50,46 @@ class Gateway:
         # construction-time backend knobs (e.g. native_c_table's block_rows,
         # pallas' impl) — forwarded to every engine this gateway builds
         self.backend_kwargs = backend_kwargs
-        self.metrics = MetricsRegistry()
-        # validate the route up front and let the backend's declared
-        # capabilities decide cacheability: the cache is only sound when the
-        # backend promises bit-deterministic outputs for this mode
-        caps = backend_class(backend).capabilities
-        if mode not in caps.modes:
+        # execution plan spec: None/"auto"/"single"/"tree_parallel"/
+        # "row_parallel" (+ shard count), resolved per engine build.  Resolve
+        # once here so an impossible route (tree-parallel needs exact integer
+        # partials, which float mode lacks) fails at construction like any
+        # other bad route, not on the first request's lazy engine build.
+        from repro.core.ensemble import mode_spec
+        from repro.plan import select_plan
+
+        self.plan = plan
+        self.shards = shards
+        resolved_plan = select_plan(plan, mode=mode, backend=backend,
+                                    shards=shards)  # raises on unknown names
+        if resolved_plan == "tree_parallel" and not mode_spec(mode).deterministic:
             raise ValueError(
-                f"backend {backend!r} does not implement mode {mode!r}; "
-                f"supported modes: {caps.modes}"
+                f"plan 'tree_parallel' needs exact integer partials; mode "
+                f"{mode!r} accumulates floats — use 'row_parallel' to shard"
             )
-        if layout is not None:
-            caps.require_layout(layout, backend)
+        self.metrics = MetricsRegistry()
+        # validate the route up front and let the backends' declared
+        # capabilities decide cacheability: the cache is only sound when
+        # every shard backend promises bit-deterministic outputs for this
+        # mode.  ``backend`` may be a sequence of names (heterogeneous
+        # tree-parallel shards) — all of them must agree.
+        names = [backend] if isinstance(backend, str) else list(backend)
+        deterministic = True
+        for name in names:
+            caps = backend_class(name).capabilities
+            if mode not in caps.modes:
+                raise ValueError(
+                    f"backend {name!r} does not implement mode {mode!r}; "
+                    f"supported modes: {caps.modes}"
+                )
+            if layout is not None:
+                caps.require_layout(layout, name)
+            deterministic &= mode in caps.deterministic_modes
         # cache keys stay (model, version, mode, row-key): deterministic-mode
-        # scores are bit-identical across layouts AND backends, so entries
-        # are shared no matter which route computed them
-        self.cache = QuantizedKeyCache(
-            cache_rows if mode in caps.deterministic_modes else 0
-        )
+        # scores are bit-identical across layouts, backends, AND execution
+        # plans (the plan-conformance invariant), so entries are shared no
+        # matter which route — or how many shards — computed them
+        self.cache = QuantizedKeyCache(cache_rows if deterministic else 0)
         self.batcher = MicroBatcher(
             self._execute,
             max_batch_rows=max_batch_rows,
@@ -73,12 +99,18 @@ class Gateway:
         )
 
     # ----------------------------------------------------------- execution
+    def _engine(self, mv):
+        return mv.engine(self.mode, backend=self.backend, layout=self.layout,
+                         backend_kwargs=self.backend_kwargs,
+                         plan=self.plan, shards=self.shards)
+
     def _execute(self, model_id: str, X: np.ndarray):
         """Batch executor handed to the MicroBatcher (runs in a thread)."""
         mv = self.registry.get(model_id)  # resolve version at dispatch time
-        eng = mv.engine(self.mode, backend=self.backend, layout=self.layout,
-                        backend_kwargs=self.backend_kwargs)
+        eng = self._engine(mv)
         scores, preds = eng.predict_scores(X)
+        # per-shard wall time of this dispatch -> the model's metrics row
+        self.metrics.model(model_id).record_shards(eng.drain_shard_timings())
         # meta = the version that actually computed, so cache fills are keyed
         # consistently even when a hot-swap lands between submit and dispatch
         return scores, preds, eng.padded_rows(len(X)), mv.version

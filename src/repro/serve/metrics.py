@@ -1,11 +1,15 @@
 """Per-model serving metrics: throughput, latency percentiles, batch
-occupancy, cache hit rate.
+occupancy, cache hit rate, per-shard execution timings.
 
 Recorded by the gateway on every request/batch; surfaced as a plain stats
 dict (``MetricsRegistry.stats``) and a human table (``render_table``) so the
 CLI, tests, and benchmarks all read the same numbers.  Latencies are kept in
 a bounded reservoir (newest-wins) so long-running gateways don't grow
-without bound.
+without bound.  Shard timings come from the execution plan
+(``TreeEngine.drain_shard_timings``): one labeled row per shard of the
+active plan (e.g. ``s0:reference[0:5]``, ``fused:reference[x8]``,
+``r1/4``), cumulative wall-ms and call counts — the observable that shows
+whether a tree-/row-parallel plan actually balances its shards.
 """
 from __future__ import annotations
 
@@ -29,6 +33,8 @@ class ModelMetrics:
     cache_hits: int = 0
     cache_misses: int = 0
     latencies_ms: list = field(default_factory=list)
+    # per-shard execution time: label -> [ms_total, calls]
+    shard_ms: dict = field(default_factory=dict)
     t_first: float = 0.0
     t_last: float = 0.0
 
@@ -51,6 +57,13 @@ class ModelMetrics:
     def record_cache(self, hits: int, misses: int) -> None:
         self.cache_hits += hits
         self.cache_misses += misses
+
+    def record_shards(self, timings: dict) -> None:
+        """Fold one plan drain (``{label: (ms, calls)}``) into the totals."""
+        for label, (ms, calls) in timings.items():
+            tot = self.shard_ms.setdefault(label, [0.0, 0])
+            tot[0] += ms
+            tot[1] += calls
 
     def stats(self) -> dict:
         lat = np.asarray(self.latencies_ms, np.float64)
@@ -77,6 +90,16 @@ class ModelMetrics:
             "pad_efficiency": self.batched_rows / self.padded_rows if self.padded_rows else 0.0,
             "cache_hit_rate": self.cache_hits / probed if probed else 0.0,
             "cache_hits": self.cache_hits,
+            # per-shard execution time of the serving plan: mean ms per call
+            # exposes shard imbalance, total ms the parallel overlap
+            "shards": {
+                label: {
+                    "ms_total": ms,
+                    "calls": calls,
+                    "ms_per_call": ms / calls if calls else 0.0,
+                }
+                for label, (ms, calls) in sorted(self.shard_ms.items())
+            },
         }
 
 

@@ -34,25 +34,41 @@ class ModelVersion:
     _engines: dict = field(default_factory=dict, repr=False)
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
 
-    def engine(self, mode: str = "integer", *, backend: str = "reference",
-               layout: str = None, backend_kwargs: dict = None) -> TreeEngine:
-        """The memoized TreeEngine for one (mode, backend, layout) route.
+    def engine(self, mode: str = "integer", *, backend="reference",
+               layout: str = None, backend_kwargs: dict = None,
+               plan: str = None, shards: int = None) -> TreeEngine:
+        """The memoized TreeEngine for one (mode, backend, layout, plan,
+        shards) route.
 
         ``layout=None`` resolves to the backend's ``preferred_layout`` (and
         memoizes under the resolved name, so a later explicit request for
-        that layout reuses the same engine).  ``backend_kwargs`` only apply
-        on the call that first builds the engine; later lookups for the same
-        route return it as-is.
+        that layout reuses the same engine); a sequence of backend names
+        (heterogeneous tree-parallel) memoizes under the tuple.  ``plan``/
+        ``shards`` select the execution plan (single-shard by default).
+        ``backend_kwargs`` only apply on the call that first builds the
+        engine; later lookups for the same route return it as-is.
         """
         from repro.backends import backend_class
+        from repro.plan import select_plan
 
-        resolved = layout or backend_class(backend).capabilities.preferred_layout
-        key = (mode, backend, resolved)
+        if isinstance(backend, str):
+            resolved = layout or backend_class(backend).capabilities.preferred_layout
+            backend_key = backend
+        else:  # heterogeneous shard spec: memoize under the name tuple
+            resolved = layout
+            backend_key = tuple(backend)
+        # memoize under the *resolved* plan so plan=None / "auto" / "single"
+        # (and their equivalent shard counts) share one engine instead of
+        # rebuilding — and recompiling — the same route per alias
+        resolved_plan = select_plan(plan, mode=mode, backend=backend,
+                                    shards=shards, model=self.packed)
+        key = (mode, backend_key, resolved, resolved_plan,
+               None if resolved_plan == "single" else shards)
         with self._lock:
             if key not in self._engines:
                 self._engines[key] = TreeEngine(
                     self.packed, mode=mode, backend=backend, layout=resolved,
-                    backend_kwargs=backend_kwargs,
+                    backend_kwargs=backend_kwargs, plan=plan, shards=shards,
                 )
             return self._engines[key]
 

@@ -1,0 +1,70 @@
+"""Shared degenerate-forest builders for the conformance suites.
+
+Used by ``test_backends.py`` (cross-backend/layout/variant bit-identity) and
+``test_plans.py`` (cross-plan bit-identity + ``ForestIR.subset`` round
+trips): single-node stumps, a one-tree forest, and a strongly depth-skewed
+mix — the packing edge cases padding used to hide.
+"""
+import numpy as np
+
+
+def forest_from_trees(trees, n_classes, n_features):
+    from repro.trees.forest import RandomForestClassifier
+
+    f = RandomForestClassifier(n_estimators=len(trees))
+    f.trees_ = trees
+    f.n_classes_ = n_classes
+    f.n_features_ = n_features
+    return f
+
+
+def stump(probs):
+    """A single-node tree: the root IS the leaf (n_nodes == 1, depth 0)."""
+    from repro.trees.cart import TreeArrays
+
+    return TreeArrays(
+        feature=np.array([-1], np.int32),
+        threshold=np.zeros(1, np.float32),
+        left=np.zeros(1, np.int32),
+        right=np.zeros(1, np.int32),
+        leaf_probs=np.asarray([probs], np.float64),
+        depth=0,
+    )
+
+
+def chain_tree(depth, n_classes):
+    """A right-leaning chain: node 2k internal on feature 0, node 2k+1 its
+    left leaf, final node the rightmost leaf — maximal depth skew."""
+    from repro.trees.cart import TreeArrays
+
+    n = 2 * depth + 1
+    feature = np.full(n, -1, np.int32)
+    threshold = np.zeros(n, np.float32)
+    left = np.arange(n, dtype=np.int32)
+    right = left.copy()
+    probs = np.zeros((n, n_classes), np.float64)
+    for k in range(depth):
+        node = 2 * k
+        feature[node] = 0
+        threshold[node] = float(k) - depth / 2.0
+        left[node] = node + 1
+        right[node] = node + 2
+        probs[node + 1, k % n_classes] = 1.0
+    probs[n - 1, (depth + 1) % n_classes] = 1.0
+    return TreeArrays(feature=feature, threshold=threshold, left=left,
+                      right=right, leaf_probs=probs, depth=depth)
+
+
+DEGENERATE_FORESTS = {
+    # every tree is a single-node stump (n_nodes == 1, max_depth == 0)
+    "stumps": lambda: forest_from_trees(
+        [stump([1.0, 0.0, 0.0]), stump([0.0, 0.5, 0.5]),
+         stump([0.25, 0.25, 0.5])], 3, 4),
+    # a forest of exactly one (non-trivial) tree
+    "single_tree": lambda: forest_from_trees([chain_tree(3, 3)], 3, 4),
+    # one deep chain among stumps: ragged's O(sum nodes) vs padded's
+    # O(T * max nodes) worst case, plus mixed per-tree depths in one walk
+    "depth_skewed": lambda: forest_from_trees(
+        [chain_tree(11, 3), stump([0.0, 1.0, 0.0]), stump([0.6, 0.2, 0.2])],
+        3, 4),
+}

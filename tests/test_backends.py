@@ -71,8 +71,9 @@ def test_registry_unknown_name_lists_available(small_packed):
 
 
 def test_backend_rejects_unsupported_mode(small_packed):
-    # pallas implements only the paper's integer path
-    assert backend_class("pallas").capabilities.modes == ("integer",)
+    # pallas runs the integer accumulation; since the partials/finalize
+    # split that serves both deterministic modes, but never float
+    assert backend_class("pallas").capabilities.modes == ("flint", "integer")
     with pytest.raises(ValueError, match="pallas"):
         create_backend("pallas", small_packed, mode="float")
 
@@ -84,6 +85,7 @@ def test_capability_flags():
     tbl = backend_class("native_c_table").capabilities
     assert set(ref.modes) == {"float", "flint", "integer"}
     assert ref.deterministic_modes == ("flint", "integer")
+    assert pal.deterministic_modes == ("flint", "integer")
     assert ref.compiles_per_shape and pal.compiles_per_shape
     assert not nat.compiles_per_shape  # the C loop takes any row count
     assert pal.preferred_block_rows == 256  # aligns buckets with kernel tiles
@@ -189,66 +191,10 @@ def test_gateway_serves_same_model_through_every_backend(small_forest, shuttle_s
 
 # ----------------------------------------------- cross-layout conformance
 
-def _forest_from_trees(trees, n_classes, n_features):
-    from repro.trees.forest import RandomForestClassifier
-
-    f = RandomForestClassifier(n_estimators=len(trees))
-    f.trees_ = trees
-    f.n_classes_ = n_classes
-    f.n_features_ = n_features
-    return f
-
-
-def _stump(probs):
-    """A single-node tree: the root IS the leaf (n_nodes == 1, depth 0)."""
-    from repro.trees.cart import TreeArrays
-
-    return TreeArrays(
-        feature=np.array([-1], np.int32),
-        threshold=np.zeros(1, np.float32),
-        left=np.zeros(1, np.int32),
-        right=np.zeros(1, np.int32),
-        leaf_probs=np.asarray([probs], np.float64),
-        depth=0,
-    )
-
-
-def _chain_tree(depth, n_classes):
-    """A right-leaning chain: node 2k internal on feature 0, node 2k+1 its
-    left leaf, final node the rightmost leaf — maximal depth skew."""
-    from repro.trees.cart import TreeArrays
-
-    n = 2 * depth + 1
-    feature = np.full(n, -1, np.int32)
-    threshold = np.zeros(n, np.float32)
-    left = np.arange(n, dtype=np.int32)
-    right = left.copy()
-    probs = np.zeros((n, n_classes), np.float64)
-    for k in range(depth):
-        node = 2 * k
-        feature[node] = 0
-        threshold[node] = float(k) - depth / 2.0
-        left[node] = node + 1
-        right[node] = node + 2
-        probs[node + 1, k % n_classes] = 1.0
-    probs[n - 1, (depth + 1) % n_classes] = 1.0
-    return TreeArrays(feature=feature, threshold=threshold, left=left,
-                      right=right, leaf_probs=probs, depth=depth)
-
-
-_DEGENERATE = {
-    # every tree is a single-node stump (n_nodes == 1, max_depth == 0)
-    "stumps": lambda: _forest_from_trees(
-        [_stump([1.0, 0.0, 0.0]), _stump([0.0, 0.5, 0.5]),
-         _stump([0.25, 0.25, 0.5])], 3, 4),
-    # a forest of exactly one (non-trivial) tree
-    "single_tree": lambda: _forest_from_trees([_chain_tree(3, 3)], 3, 4),
-    # one deep chain among stumps: ragged's O(sum nodes) vs padded's
-    # O(T * max nodes) worst case, plus mixed per-tree depths in one walk
-    "depth_skewed": lambda: _forest_from_trees(
-        [_chain_tree(11, 3), _stump([0.0, 1.0, 0.0]), _stump([0.6, 0.2, 0.2])],
-        3, 4),
-}
+from forest_cases import (  # shared with test_plans.py
+    DEGENERATE_FORESTS as _DEGENERATE,
+    forest_from_trees as _forest_from_trees,
+)
 
 
 @pytest.fixture(scope="module", params=sorted(_DEGENERATE), ids=sorted(_DEGENERATE))

@@ -16,12 +16,35 @@ from repro.data.tabular import make_shuttle_like, train_test_split
 from repro.trees.forest import RandomForestClassifier
 
 
-def test_flint_identical_to_float(small_packed, shuttle_small):
+def test_flint_matches_float(small_packed, shuttle_small):
+    """FlInt-keyed path: identical predictions; probabilities agree to the
+    fixed-point bound.  (Since the partials/finalize split, flint
+    accumulates the exact uint32 partials — shardable with zero loss — and
+    recovers float probabilities by one reciprocal multiply, so scores are
+    within quantization error of the float path rather than equal to it.)"""
     _, _, Xte, _ = shuttle_small
     pf, predf = predict_float(small_packed, Xte)
     pfl, predfl = predict_flint(small_packed, Xte)
     np.testing.assert_array_equal(np.asarray(predf), np.asarray(predfl))
-    np.testing.assert_array_equal(np.asarray(pf), np.asarray(pfl))
+    assert np.abs(np.asarray(pf) - np.asarray(pfl)).max() < 1e-6
+    assert np.asarray(pfl).dtype == np.float32
+
+
+def test_flint_scores_are_finalized_integer_partials(small_packed, shuttle_small):
+    """flint == finalize(integer partials): same exact accumulator, one
+    reciprocal multiply — the property that makes flint tree-shardable."""
+    from repro.core.ensemble import finalize_partials, predict_partials_mode
+
+    _, _, Xte, _ = shuttle_small
+    acc_i, _ = predict_integer(small_packed, Xte[:64])
+    acc_fl = predict_partials_mode(small_packed, Xte[:64], "flint")
+    np.testing.assert_array_equal(np.asarray(acc_i), np.asarray(acc_fl))
+    s_np, p_np = finalize_partials("flint", np.asarray(acc_fl),
+                                   small_packed.n_trees, small_packed.scale)
+    s_jnp, p_jnp = predict_flint(small_packed, Xte[:64])
+    # numpy finalize (backends/plans) == jitted jnp finalize, bit for bit
+    np.testing.assert_array_equal(s_np, np.asarray(s_jnp))
+    np.testing.assert_array_equal(p_np, np.asarray(p_jnp))
 
 
 def test_integer_predictions_identical(small_packed, shuttle_small, small_forest):

@@ -284,3 +284,71 @@ def test_gateway_float_mode_disables_cache(small_packed):
     reg.register_packed("m", small_packed)
     gw = Gateway(reg, mode="float")
     assert gw.cache.capacity_rows == 0
+
+
+def test_gateway_plan_routing_bit_identical(small_forest, shuttle_small):
+    """A sharded-plan gateway serves bit-identically to the single-shard
+    route — deterministic outputs are bit-identical across plans, which is
+    exactly why cache keys can stay plan-agnostic."""
+    _, _, Xte, _ = shuttle_small
+    reg = ModelRegistry()
+    reg.register_forest("m", small_forest)
+    gw_single = Gateway(reg, mode="integer", max_delay_ms=1.0)
+    gw_tp = Gateway(reg, mode="integer", plan="tree_parallel", shards=3,
+                    max_delay_ms=1.0)
+
+    async def run(gw):
+        out = await gw.submit("m", Xte[:12])
+        await gw.close()
+        return out
+
+    s_s, p_s = asyncio.run(run(gw_single))
+    s_t, p_t = asyncio.run(run(gw_tp))
+    np.testing.assert_array_equal(s_s, s_t)
+    np.testing.assert_array_equal(p_s, p_t)
+    mv = reg.get("m")
+    eng = mv.engine("integer", plan="tree_parallel", shards=3)
+    assert eng.plan_name == "tree_parallel" and eng.n_shards == 3
+    # the route is memoized separately from the single-shard engine
+    assert eng is not mv.engine("integer")
+    assert eng is mv.engine("integer", plan="tree_parallel", shards=3)
+    with pytest.raises(KeyError, match="no-such"):
+        Gateway(reg, mode="integer", plan="no-such-plan")
+
+
+def test_gateway_hot_swap_with_multi_shard_plan_in_flight(small_forest,
+                                                          shuttle_small):
+    """Hot-swap while a tree-parallel plan is serving: the swapped-in version
+    gets its *own* plan (its own shard carve — the new forest has a different
+    tree count), responses never mix partials across versions, and the new
+    traffic is bit-identical to a direct sharded engine on v2."""
+    Xtr, ytr, Xte, _ = shuttle_small
+    from repro.trees.forest import RandomForestClassifier
+
+    other = RandomForestClassifier(n_estimators=5, max_depth=4, seed=77).fit(
+        Xtr[:1500], ytr[:1500]
+    )
+    reg = ModelRegistry()
+    reg.register_forest("m", small_forest)
+    gw = Gateway(reg, mode="integer", plan="tree_parallel", shards=3,
+                 max_delay_ms=1.0)
+
+    async def run():
+        s_v1, _ = await gw.submit("m", Xte[:8])
+        mv2 = reg.register_forest("m", other)  # hot-swap under the gateway
+        s_v2, p_v2 = await gw.submit("m", Xte[:8])
+        await gw.close()
+        return s_v1, s_v2, p_v2, mv2
+
+    s_v1, s_v2, p_v2, mv2 = asyncio.run(run())
+    assert mv2.version == 2
+    # v2 traffic == direct tree-parallel engine on v2 (5 trees -> 3 shards)
+    eng2 = mv2.engine("integer", plan="tree_parallel", shards=3)
+    d_s, d_p = eng2.predict_scores(Xte[:8])
+    np.testing.assert_array_equal(s_v2, d_s)
+    np.testing.assert_array_equal(p_v2, d_p)
+    # ... and == the single-shard walk on v2 (no cross-version partial mixing:
+    # a v1 shard summed into v2 could not reproduce this bit-exactly)
+    d1_s, d1_p = mv2.engine("integer").predict_scores(Xte[:8])
+    np.testing.assert_array_equal(s_v2, d1_s)
+    assert not np.array_equal(s_v1, s_v2)  # v1 cache never leaks into v2
