@@ -3,8 +3,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: test test-fast conformance check bench bench-smoke ci \
-	serve-trees serve-gateway
+.PHONY: test test-fast conformance check bench bench-smoke ci obs \
+	obs-artifacts serve-trees serve-gateway
 
 # tier-1 verify (see ROADMAP.md)
 test:
@@ -14,6 +14,20 @@ test:
 # CI tier-1 job runs; `make check` still runs everything
 test-fast:
 	$(PY) -m pytest -q -m "not slow"
+
+# the observability suite alone: histograms, tracer, span integrity
+# through the gateway, exposition renderers
+obs:
+	$(PY) -m pytest -q tests/test_obs.py
+
+# short fully-traced gateway run -> sample trace JSONL + metrics snapshot
+# (Prometheus text + JSON) under benchmarks/artifacts/, uploaded by CI
+obs-artifacts:
+	mkdir -p benchmarks/artifacts
+	$(PY) -m repro.launch.serve --trees --gateway --rows 2000 \
+		--gw-requests 80 --gw-rate 1000 \
+		--gw-trace-out benchmarks/artifacts/trace_sample.jsonl \
+		--gw-metrics-out benchmarks/artifacts/metrics_snapshot.prom
 
 # cross-(backend, layout, variant, plan) bit-identity suite: reference /
 # pallas (gather + leaf_major linear scan) / native_c / native_c_table

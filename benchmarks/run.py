@@ -330,6 +330,12 @@ def gateway_vs_naive():
         rows = sum(len(X) for _, X, _ in results)
         return rows, dt, st, rejected
 
+    def stage_cols(st):
+        # always-on per-stage attribution (mean wall ms per sample); NaN
+        # (no samples for a stage) renders as the literal "nan", fine in CSV
+        return (f"queue_ms={st['queue_ms']:.3f};pad_ms={st['pad_ms']:.3f};"
+                f"shard_ms={st['shard_ms']:.3f};finalize_ms={st['finalize_ms']:.3f}")
+
     for rate in (500.0, 2000.0, float("inf")):
         rows, gw_dt, st, rejected = run_server(rate, batched=True)
         n_rows, n_dt, n_st, n_rej = run_server(rate, batched=False)
@@ -341,8 +347,61 @@ def gateway_vs_naive():
             f"bare_loop_rows_per_s={bare_rows_per_s:.0f};"
             f"occupancy={st['batch_occupancy']:.1f};hit_rate={st['cache_hit_rate']:.2f};"
             f"p95_ms={st['p95_ms']:.2f}(naive={n_st['p95_ms']:.2f});"
-            f"rejected={rejected}(naive={n_rej})",
+            f"rejected={rejected}(naive={n_rej});" + stage_cols(st),
         )
+
+
+def gateway_stage_breakdown():
+    """Where a traced request's wall time goes, from actual span trees: one
+    fully-traced burst through the gateway, stage totals aggregated from the
+    per-request spans (queue wait, cache probe, pad, shard execute, merge,
+    finalize, stitch).  Runs separately from ``gateway_vs_naive`` so the
+    timed comparison rows stay untraced."""
+    import asyncio
+
+    from repro.launch.serve import run_gateway_workload
+    from repro.obs import Tracer, request_trees
+    from repro.serve.gateway import Gateway
+    from repro.serve.registry import ModelRegistry
+
+    data = _datasets()["shuttle"]
+    rf, packed, Xte, _ = _forest(data, 16, depth=6)
+    reg = ModelRegistry()
+    mv = reg.register_packed("shuttle", packed)
+    mv.engine("integer").warm(64)
+
+    tracer = Tracer(sample=1.0)
+    gw = Gateway(reg, mode="integer", max_batch_rows=64, max_delay_ms=4.0,
+                 max_queue_rows=8192, tracer=tracer)
+    t0 = time.perf_counter()
+    results, _ = asyncio.run(run_gateway_workload(
+        gw, {"shuttle": Xte}, n_requests=200, rate_hz=float("inf"),
+        seed=17, row_choices=(1,),
+    ))
+    dt = time.perf_counter() - t0
+    asyncio.run(gw.close())
+
+    trees = request_trees(tracer.spans())
+
+    def fold(node, acc):
+        # batch children are shared across riders; folding per tree counts
+        # each request's view of its stages, which is the per-request story
+        key = node["name"].split(":")[0]  # shard:s0[...] -> shard
+        acc[key] = acc.get(key, 0.0) + node["dur_ms"]
+        for c in node["children"]:
+            fold(c, acc)
+        return acc
+
+    totals: dict = {}
+    for t in trees:
+        fold(t, totals)
+    n = max(len(trees), 1)
+    req_ms = totals.pop("request", 0.0)
+    stages = ";".join(f"{k}_ms={v / n:.3f}" for k, v in sorted(totals.items()))
+    emit(
+        "gateway_stage_breakdown", dt / max(len(results), 1) * 1e6,
+        f"traced_requests={len(trees)};request_ms={req_ms / n:.3f};" + stages,
+    )
 
 
 def backend_matrix():
@@ -523,6 +582,7 @@ BENCHES = (
     backend_matrix,
     plan_scaling,
     gateway_vs_naive,
+    gateway_stage_breakdown,
     roofline_table,
 )
 

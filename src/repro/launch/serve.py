@@ -21,11 +21,17 @@ Three modes, matching the paper's end-to-end story adapted to a serving stack:
     outputs)``, and the run ends with a per-model metrics table (throughput,
     p50/p95/p99 latency, batch occupancy, cache hit rate, per-shard
     timings) plus a bit-identity check of gateway outputs against direct
-    ``TreeEngine.predict_scores``.
+    ``TreeEngine.predict_scores``.  Observability flags: ``--gw-trace``
+    samples per-request span trees (``--gw-trace-sample`` sets the rate) and
+    prints a flame-style stage summary; ``--gw-trace-out`` writes the spans
+    as JSONL; ``--gw-metrics-out`` writes a Prometheus-text metrics snapshot
+    (plus a ``.json`` sibling with the full stats dict).
   * LM mode: load a smoke config and run batched prefill+decode generation.
 
   PYTHONPATH=src python -m repro.launch.serve --trees --rows 20000
   PYTHONPATH=src python -m repro.launch.serve --trees --gateway --gw-requests 400
+  PYTHONPATH=src python -m repro.launch.serve --trees --gateway \
+      --gw-trace-out trace.jsonl --gw-metrics-out metrics.prom
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --smoke
 """
 from __future__ import annotations
@@ -181,12 +187,18 @@ def serve_gateway(args):
     t0 = time.time()
     pools, (Xtr, ytr) = build_gateway_models(registry, rows=args.rows // 2 or 4000)
     print(f"registered models in {time.time()-t0:.1f}s: {registry.describe()}")
+    tracer = None
+    if args.gw_trace or args.gw_trace_out:
+        from repro.obs import Tracer
+
+        tracer = Tracer(sample=args.gw_trace_sample)
     gateway = Gateway(
         registry,
         mode=args.gw_mode,
         max_batch_rows=args.gw_batch_rows,
         max_delay_ms=args.gw_max_delay_ms,
         max_queue_rows=args.gw_queue_rows,
+        tracer=tracer,
         **route,
     )
 
@@ -228,6 +240,29 @@ def serve_gateway(args):
               f"{dt:.2f}s wall ({len(results)/dt:.0f} req/s)")
         print(gateway.render_table())
         print(f"cache: {gateway.cache.stats()}")
+
+        if tracer is not None:
+            from repro.obs import render_flame, write_jsonl
+
+            spans = tracer.spans()
+            print(f"\ntraces: {tracer.started} requests sampled, "
+                  f"{len(spans)} spans ({tracer.dropped} dropped)")
+            print(render_flame(spans))
+            if args.gw_trace_out:
+                write_jsonl(spans, args.gw_trace_out)
+                print(f"wrote trace JSONL -> {args.gw_trace_out}")
+        if args.gw_metrics_out:
+            import re
+
+            from repro.obs import render_prometheus, snapshot_json
+
+            st = gateway.stats()
+            with open(args.gw_metrics_out, "w") as f:
+                f.write(render_prometheus(st["per_model"]))
+            jpath = re.sub(r"\.prom$", "", args.gw_metrics_out) + ".json"
+            with open(jpath, "w") as f:
+                f.write(snapshot_json(st, aggregate=gateway.metrics.aggregate()))
+            print(f"wrote metrics exposition -> {args.gw_metrics_out} + {jpath}")
 
         # bit-identity: gateway outputs == direct engine on the same rows
         ok = True
@@ -306,6 +341,17 @@ def main(argv=None):
                     help="shard count for tree-/row-parallel plans (trees "
                          "are carved via ForestIR.subset; partial integer "
                          "scores merge bit-exactly)")
+    ap.add_argument("--gw-trace", action="store_true",
+                    help="sample per-request span trees and print a "
+                         "flame-style stage summary after the workload")
+    ap.add_argument("--gw-trace-sample", type=float, default=1.0,
+                    help="fraction of requests to trace (deterministic "
+                         "accumulator sampling; default 1.0)")
+    ap.add_argument("--gw-trace-out", default=None,
+                    help="write sampled spans as JSONL (implies --gw-trace)")
+    ap.add_argument("--gw-metrics-out", default=None,
+                    help="write a Prometheus-text metrics snapshot here "
+                         "(plus a .json sibling with the full stats dict)")
     ap.add_argument("--arch", default="granite-3-2b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)

@@ -105,7 +105,14 @@ class ExecutionPlan(abc.ABC):
         self._n_trees = getattr(model, "n_trees", None)
         self._scale = getattr(model, "scale", None)
         self._timings: dict = {}
+        self._stages: dict = {}
         self._timings_lock = threading.Lock()
+        # observability attach: the tracer is plan-wide, the active parent
+        # span is per-*thread* (set by the dispatching thread — the gateway's
+        # batch executor — and handed to shard pool threads explicitly at
+        # submit time, so concurrent dispatches never cross-parent spans)
+        self._tracer = None
+        self._trace_tls = threading.local()
 
     # ------------------------------------------------------------ execution
     @abc.abstractmethod
@@ -120,7 +127,12 @@ class ExecutionPlan(abc.ABC):
                 f"non-deterministic mode {self.mode!r}"
             )
         acc = self.predict_partials(X)
-        return finalize_partials(self.mode, acc, self._n_trees, self._scale)
+        t0 = time.perf_counter_ns()
+        out = finalize_partials(self.mode, acc, self._n_trees, self._scale)
+        t1 = time.perf_counter_ns()
+        self._record_stage("finalize", (t1 - t0) / 1e9)
+        self._span("finalize", t0, t1, self.trace_parent)
+        return out
 
     # ------------------------------------------------------- shard metadata
     @property
@@ -176,16 +188,50 @@ class ExecutionPlan(abc.ABC):
             "layout": self.layout,
         }
 
-    # --------------------------------------------------------- shard timing
+    # ------------------------------------------------- timing + trace spans
+    def attach_tracer(self, tracer) -> None:
+        """Attach a :class:`repro.obs.Tracer` (plan-wide; idempotent)."""
+        self._tracer = tracer
+
+    @property
+    def trace_parent(self):
+        """The span that parents this *thread's* execution spans (set by the
+        dispatching thread via the setter; ``None`` when untraced)."""
+        return getattr(self._trace_tls, "parent", None)
+
+    @trace_parent.setter
+    def trace_parent(self, span) -> None:
+        self._trace_tls.parent = span
+
+    def _span(self, name: str, t0_ns: int, t1_ns: int, parent, **attrs) -> None:
+        """Commit one completed span under ``parent`` (no-op when untraced —
+        the one branch the disabled path pays)."""
+        if parent and self._tracer is not None:
+            self._tracer.record(name, t0_ns, t1_ns, parent=parent, **attrs)
+
     def _record(self, label: str, seconds: float) -> None:
         with self._timings_lock:
             ms, calls = self._timings.get(label, (0.0, 0))
             self._timings[label] = (ms + seconds * 1e3, calls + 1)
 
-    def _timed(self, label: str, fn, *args):
-        t0 = time.perf_counter()
+    def _record_stage(self, stage: str, seconds: float) -> None:
+        """Accumulate one pipeline-stage sample (pad/merge/finalize — the
+        engine adds pad); drained separately from shard labels."""
+        with self._timings_lock:
+            ms, calls = self._stages.get(stage, (0.0, 0))
+            self._stages[stage] = (ms + seconds * 1e3, calls + 1)
+
+    def _timed(self, label: str, fn, *args, span_parent=None):
+        """Run ``fn`` timing it into the shard ledger; when ``span_parent``
+        is a live span, also commit a ``shard:<label>`` trace span.  Shard
+        pool threads receive the parent explicitly (captured by the
+        dispatching thread), never via the thread-local."""
+        t0 = time.perf_counter_ns()
         out = fn(*args)
-        self._record(label, time.perf_counter() - t0)
+        t1 = time.perf_counter_ns()
+        self._record(label, (t1 - t0) / 1e9)
+        if span_parent:
+            self._span(f"shard:{label}", t0, t1, span_parent, label=label)
         return out
 
     def drain_timings(self) -> dict:
@@ -194,6 +240,14 @@ class ExecutionPlan(abc.ABC):
         ``serve.metrics`` after each batch execute."""
         with self._timings_lock:
             out, self._timings = self._timings, {}
+        return out
+
+    def drain_stage_timings(self) -> dict:
+        """Pipeline-stage wall time since the last drain:
+        ``{stage: (ms_total, calls)}`` — pad / merge / finalize, fed into
+        the per-stage metric histograms alongside the shard ledger."""
+        with self._timings_lock:
+            out, self._stages = self._stages, {}
         return out
 
 

@@ -11,6 +11,7 @@ batches for shape-oblivious backends and multi-core hosts.
 """
 from __future__ import annotations
 
+import time
 from concurrent.futures import ThreadPoolExecutor
 from typing import Optional
 
@@ -45,11 +46,23 @@ class RowParallelPlan(ExecutionPlan):
 
     def _scatter(self, X, method):
         chunks = self._chunks(X)
+        # capture the parent span here, on the dispatching thread
+        parent = self.trace_parent
         futs = [
-            self._pool.submit(self._timed, f"r{i}/{len(chunks)}", method, c)
+            self._pool.submit(self._timed, f"r{i}/{len(chunks)}", method, c,
+                              span_parent=parent)
             for i, c in enumerate(chunks)
         ]
         return [f.result() for f in futs]
+
+    def _merged(self, parts, parent):
+        """Concatenate row chunks under a timed ``merge`` stage/span."""
+        t0 = time.perf_counter_ns()
+        out = np.concatenate([np.asarray(p) for p in parts])
+        t1 = time.perf_counter_ns()
+        self._record_stage("merge", (t1 - t0) / 1e9)
+        self._span("merge", t0, t1, parent, shards=len(parts))
+        return out
 
     def predict_partials(self, X):
         if not self.deterministic:
@@ -57,16 +70,21 @@ class RowParallelPlan(ExecutionPlan):
                 f"mode {self.mode!r} has no integer partials; row_parallel "
                 "serves it through predict_scores"
             )
-        return np.concatenate(
-            [np.asarray(p) for p in self._scatter(X, self.backend.predict_partials)]
-        )
+        parent = self.trace_parent
+        return self._merged(self._scatter(X, self.backend.predict_partials),
+                            parent)
 
     def predict_scores(self, X):
         if self.deterministic:
             return super().predict_scores(X)  # finalize(concatenated partials)
+        parent = self.trace_parent
         outs = self._scatter(X, self.backend.predict_scores)
+        t0 = time.perf_counter_ns()
         scores = np.concatenate([np.asarray(s) for s, _ in outs])
         preds = np.concatenate([np.asarray(p) for _, p in outs])
+        t1 = time.perf_counter_ns()
+        self._record_stage("merge", (t1 - t0) / 1e9)
+        self._span("merge", t0, t1, parent, shards=len(outs))
         return scores, preds
 
     # -------------------------------------------------------------- metadata

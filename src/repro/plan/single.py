@@ -27,6 +27,14 @@ class SingleShardPlan(ExecutionPlan):
         # an already-constructed backend instance carries its own mode/model
         super().__init__(self.backend.packed, mode=self.backend.mode)
         self._label = f"s0:{self.backend.name}"
+        # a backend that never overrode predict_partials (custom
+        # predict_scores-only implementations) keeps its direct route —
+        # the partials/finalize split is only sound when partials exist
+        from repro.backends.base import TreeBackend
+
+        impl = getattr(type(self.backend), "predict_partials", None)
+        self._has_partials = (impl is not None
+                              and impl is not TreeBackend.predict_partials)
 
     @property
     def backends(self) -> tuple:
@@ -37,7 +45,16 @@ class SingleShardPlan(ExecutionPlan):
         return self.backend.packed
 
     def predict_partials(self, X):
-        return self._timed(self._label, self.backend.predict_partials, X)
+        return self._timed(self._label, self.backend.predict_partials, X,
+                           span_parent=self.trace_parent)
 
     def predict_scores(self, X):
-        return self._timed(self._label, self.backend.predict_scores, X)
+        # deterministic modes funnel through the base partials+finalize
+        # split (bit-identical to the backend's own wrapper — same
+        # ``finalize_partials`` — but gives finalize its own stage span);
+        # float mode and partials-less custom backends stay on the
+        # backend's fused predict
+        if self.deterministic and self._has_partials:
+            return super().predict_scores(X)
+        return self._timed(self._label, self.backend.predict_scores, X,
+                           span_parent=self.trace_parent)

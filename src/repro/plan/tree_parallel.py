@@ -28,6 +28,7 @@ the batch instead).
 """
 from __future__ import annotations
 
+import time
 from concurrent.futures import ThreadPoolExecutor
 from functools import reduce
 from itertools import cycle, islice
@@ -168,25 +169,36 @@ class TreeParallelPlan(ExecutionPlan):
     # ------------------------------------------------------------ execution
     def predict_partials(self, X):
         X = np.asarray(X, np.float32)
+        # capture the parent span on the dispatching thread: the shard pool
+        # threads get it via submit args, not via the thread-local
+        parent = self.trace_parent
         if self._fused is not None:
             from repro.core.flint import float_to_key_np
 
             # materialize inside the timed region: the jitted call dispatches
-            # asynchronously, so timing it alone would record ~0ms
+            # asynchronously, so timing it alone would record ~0ms.  The
+            # device-side uint32 merge rides inside this span too.
             run = lambda xk: np.asarray(self._fused(xk))
-            return self._timed(self._fused_label, run, float_to_key_np(X))
+            return self._timed(self._fused_label, run, float_to_key_np(X),
+                               span_parent=parent)
         labels = [
             f"s{i}:{b.name}[{a}:{e}]"
             for i, (b, (a, e)) in enumerate(zip(self._shard_backends, self.ranges))
         ]
         futs = [
-            self._pool.submit(self._timed, lab, b.predict_partials, X)
+            self._pool.submit(self._timed, lab, b.predict_partials, X,
+                              span_parent=parent)
             for lab, b in zip(labels, self._shard_backends)
         ]
         partials = [np.asarray(f.result()) for f in futs]
         # uint32 adds wrap mod 2^32 — the exact merge the IR's scale bound
         # guarantees never actually wraps for a full forest
-        return reduce(np.add, partials)
+        t0 = time.perf_counter_ns()
+        merged = reduce(np.add, partials)
+        t1 = time.perf_counter_ns()
+        self._record_stage("merge", (t1 - t0) / 1e9)
+        self._span("merge", t0, t1, parent, shards=len(partials))
+        return merged
 
     # -------------------------------------------------------------- metadata
     @property

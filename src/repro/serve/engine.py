@@ -30,6 +30,7 @@ engine consults the plan's aggregated capabilities for both decisions.
 """
 from __future__ import annotations
 
+import time
 from typing import Optional
 
 import jax
@@ -117,6 +118,9 @@ class TreeEngine:
         self.mode = self.plan.mode
         self.max_bucket = max_bucket or self.plan.preferred_block_rows or 4096
         self.compiled_buckets: set[int] = set()
+        # first-execution wall ms per bucket (jit compile / native build /
+        # warm cost), drained by the gateway into per-model metrics
+        self._compile_ms: dict[int, float] = {}
 
     @property
     def backend(self):
@@ -152,6 +156,29 @@ class TreeEngine:
         """Per-shard wall time since the last drain (``{label: (ms, calls)}``)
         — what the gateway records into ``serve.metrics`` per batch."""
         return self.plan.drain_timings()
+
+    def drain_stage_timings(self) -> dict:
+        """Pipeline-stage wall time since the last drain — pad (recorded
+        here), merge + finalize (recorded by the plan)."""
+        return self.plan.drain_stage_timings()
+
+    def drain_compile_timings(self) -> dict:
+        """First-execution (compile/warm) wall ms per bucket since the last
+        drain: ``{bucket_rows: ms}``."""
+        out, self._compile_ms = self._compile_ms, {}
+        return out
+
+    # ------------------------------------------------------------- tracing
+    def attach_trace(self, tracer, parent) -> None:
+        """Attach a tracer and the span that parents this *thread's*
+        execution spans (pad → shard×N → merge → finalize).  The gateway
+        calls this around each batch execute; direct callers can too."""
+        self.plan.attach_tracer(tracer)
+        self.plan.trace_parent = parent
+
+    def detach_trace(self) -> None:
+        """Clear this thread's parent span (the tracer attach persists)."""
+        self.plan.trace_parent = None
 
     def warm(self, max_rows: int) -> None:
         """Pre-compile every bucket any batch of 1..``max_rows`` rows can map
@@ -195,12 +222,25 @@ class TreeEngine:
             X = np.concatenate([X, np.zeros((nb - b, X.shape[1]), np.float32)])
         return X, b, nb
 
-    def _run(self, X):
+    def _pad_traced(self, X):
+        """Bucket-pad under a timed ``pad`` stage (and span when traced)."""
+        t0 = time.perf_counter_ns()
         X, b, nb = self._pad(X)
+        t1 = time.perf_counter_ns()
+        self.plan._record_stage("pad", (t1 - t0) / 1e9)
+        self.plan._span("pad", t0, t1, self.plan.trace_parent, rows=b, padded=nb)
+        return X, b, nb
+
+    def _run(self, X):
+        X, b, nb = self._pad_traced(X)
+        cold = self.plan.compiles_per_shape and nb not in self.compiled_buckets
+        t0 = time.perf_counter()
         scores, preds = self.plan.predict_scores(X)
         if self.plan.compiles_per_shape:
             # only a predict that actually returned has compiled its bucket
             self.compiled_buckets.add(nb)
+            if cold:
+                self._compile_ms[nb] = (time.perf_counter() - t0) * 1e3
         return np.asarray(scores)[:b], np.asarray(preds)[:b]
 
     def predict(self, X) -> np.ndarray:
@@ -213,8 +253,12 @@ class TreeEngine:
     def predict_partials(self, X):
         """Merged (B, C) uint32 partials through the bucketed path
         (deterministic modes)."""
-        X, b, nb = self._pad(X)
+        X, b, nb = self._pad_traced(X)
+        cold = self.plan.compiles_per_shape and nb not in self.compiled_buckets
+        t0 = time.perf_counter()
         acc = self.plan.predict_partials(X)
         if self.plan.compiles_per_shape:
             self.compiled_buckets.add(nb)
+            if cold:
+                self._compile_ms[nb] = (time.perf_counter() - t0) * 1e3
         return np.asarray(acc)[:b]

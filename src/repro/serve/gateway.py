@@ -20,7 +20,19 @@ Metrics (per-model latency percentiles, throughput, batch occupancy, cache
 hit rate, admission rejects) are recorded on every request — including
 requests served entirely from cache, which count into the latency histogram
 and the ``hit_requests`` counter — and surfaced via ``Gateway.stats()`` /
-``Gateway.render_table()``.
+``Gateway.render_table()``.  Per-stage wall time (queue wait, bucket pad,
+shard execute, merge, finalize, cache probe, response stitch) is always
+recorded into log-scale histograms (``stats()["per_model"][mid]["stages"]``
+and the ``*_ms`` table columns).
+
+Tracing is opt-in: pass ``tracer=repro.obs.Tracer(...)`` and every sampled
+request carries a span tree — ``request`` → ``cache_probe`` / ``queue`` /
+``batch`` (→ ``pad`` → ``shard:*×N`` → ``merge`` → ``finalize``) →
+``stitch``.  A batch shared by several coalesced requests emits ONE batch
+subtree, parented under the first live rider and tagged with every rider's
+span id (``attrs["riders"]``) so the export layer grafts it under each.
+Untraced gateways pay one falsy-check per stage (``NULL_TRACER`` /
+``NULL_SPAN`` propagate through every hook).
 """
 from __future__ import annotations
 
@@ -29,6 +41,7 @@ import time
 import numpy as np
 
 from repro.backends import backend_class
+from repro.obs import NULL_TRACER
 from repro.serve.cache import QuantizedKeyCache, row_keys
 from repro.serve.metrics import MetricsRegistry
 from repro.serve.queue import AdmissionError, MicroBatcher
@@ -42,8 +55,11 @@ class Gateway:
                  plan: str = None, shards: int = None,
                  max_batch_rows: int = 256,
                  max_delay_ms: float = 2.0, max_queue_rows: int = 4096,
-                 cache_rows: int = 65536):
+                 cache_rows: int = 65536, tracer=None):
         self.registry = registry
+        # NULL_TRACER hands out falsy NULL_SPANs, so every span hook below
+        # short-circuits to a no-op when tracing is off
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.mode = mode
         self.backend = backend
         self.layout = layout  # None -> the backend's preferred ForestIR layout
@@ -96,7 +112,15 @@ class Gateway:
             max_delay_ms=max_delay_ms,
             max_queue_rows=max_queue_rows,
             on_batch=lambda mid, rows, padded: self.metrics.model(mid).record_batch(rows, padded),
+            on_queue=self._record_queue_waits,
+            tracer=self.tracer,
+            pass_spans=True,
         )
+
+    def _record_queue_waits(self, model_id: str, waits_ms: list) -> None:
+        mm = self.metrics.model(model_id)
+        for w in waits_ms:
+            mm.record_stage("queue", w)
 
     # ----------------------------------------------------------- execution
     def _engine(self, mv):
@@ -104,13 +128,35 @@ class Gateway:
                          backend_kwargs=self.backend_kwargs,
                          plan=self.plan, shards=self.shards)
 
-    def _execute(self, model_id: str, X: np.ndarray):
-        """Batch executor handed to the MicroBatcher (runs in a thread)."""
+    def _execute(self, model_id: str, X: np.ndarray, rider_spans=()):
+        """Batch executor handed to the MicroBatcher (runs in a thread).
+
+        ``rider_spans`` are the coalesced requests' spans in batch order.
+        The batch subtree (pad → shard×N → merge → finalize) is emitted
+        once, parented under the first *live* rider and tagged with every
+        rider's span id — the export layer grafts it under each of them.
+        """
         mv = self.registry.get(model_id)  # resolve version at dispatch time
         eng = self._engine(mv)
-        scores, preds = eng.predict_scores(X)
-        # per-shard wall time of this dispatch -> the model's metrics row
-        self.metrics.model(model_id).record_shards(eng.drain_shard_timings())
+        mm = self.metrics.model(model_id)
+        live = [s for s in rider_spans if s]
+        batch_span = None
+        if live:
+            batch_span = self.tracer.child(
+                live[0], "batch", model=model_id, rows=len(X),
+                riders=[s.span_id for s in live],
+            )
+        eng.attach_trace(self.tracer, batch_span)
+        try:
+            scores, preds = eng.predict_scores(X)
+        finally:
+            eng.detach_trace()
+            if batch_span:
+                batch_span.end()
+        # per-shard + per-stage wall time of this dispatch -> metrics row
+        mm.record_shards(eng.drain_shard_timings())
+        mm.record_stages(eng.drain_stage_timings())
+        mm.record_compiles(eng.drain_compile_timings())
         # meta = the version that actually computed, so cache fills are keyed
         # consistently even when a hot-swap lands between submit and dispatch
         return scores, preds, eng.padded_rows(len(X)), mv.version
@@ -126,7 +172,11 @@ class Gateway:
         mm = self.metrics.model(model_id)
         mv = self.registry.get(model_id)
         cacheable = self.cache.capacity_rows > 0
+        # NULL_SPAN when tracing is off or this request is unsampled —
+        # every child hook below then short-circuits
+        span = self.tracer.request_span("request", model=model_id, rows=n)
 
+        tc0 = time.perf_counter_ns()
         keys = row_keys(X) if cacheable else [None] * n
         cached: dict[int, tuple] = {}
         if cacheable:
@@ -137,6 +187,11 @@ class Gateway:
                 if hit is not None:
                     cached[i] = hit
             mm.record_cache(len(cached), n - len(cached))
+        tc1 = time.perf_counter_ns()
+        mm.record_stage("cache", (tc1 - tc0) / 1e6)
+        if span:
+            self.tracer.record("cache_probe", tc0, tc1, parent=span,
+                               hits=len(cached), rows=n)
 
         miss_idx = [i for i in range(n) if i not in cached]
         if not miss_idx:
@@ -147,10 +202,11 @@ class Gateway:
             scores, preds = self._stitch(n, cached, [], None, None)
             mm.hit_requests += 1
             mm.record_request(n, (time.perf_counter() - t0) * 1e3)
+            span.end(cache="all_hit")
             return scores, preds
         try:
             m_scores, m_preds, served_version = await self.batcher.submit(
-                model_id, X[miss_idx]
+                model_id, X[miss_idx], span=span
             )
             if cached and served_version != mv.version:
                 # a hot-swap landed between the cache probe and dispatch:
@@ -160,11 +216,16 @@ class Gateway:
                 cached = {}
                 miss_idx = list(range(n))
                 m_scores, m_preds, served_version = await self.batcher.submit(
-                    model_id, X
+                    model_id, X, span=span
                 )
         except AdmissionError:
-            mm.rejected += 1
+            # rejected requests still advance the throughput span: the
+            # gateway was demonstrably live at this instant, and freezing
+            # t_first/t_last here skews rows_per_s for everything after
+            mm.record_rejected()
+            span.end(rejected=True)
             raise
+        ts0 = time.perf_counter_ns()
         if cacheable:
             for j, i in enumerate(miss_idx):
                 self.cache.put(
@@ -172,7 +233,13 @@ class Gateway:
                     m_scores[j], m_preds[j],
                 )
         scores, preds = self._stitch(n, cached, miss_idx, m_scores, m_preds)
+        ts1 = time.perf_counter_ns()
+        mm.record_stage("stitch", (ts1 - ts0) / 1e6)
+        if span:
+            self.tracer.record("stitch", ts0, ts1, parent=span,
+                               cached=len(cached), computed=len(miss_idx))
         mm.record_request(n, (time.perf_counter() - t0) * 1e3)
+        span.end()
         return scores, preds
 
     @staticmethod

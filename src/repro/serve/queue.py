@@ -12,6 +12,14 @@ Admission control: each model queue admits at most ``max_queue_rows`` rows;
 beyond that ``submit`` fails fast with :class:`AdmissionError` (the
 closed-loop client counts these as rejects) instead of letting latency grow
 without bound.
+
+Observability: ``submit`` optionally carries the caller's request span; at
+dispatch the worker commits one ``queue`` span per pending request (enqueue →
+dispatch, the micro-batching wait) under that parent and reports the same
+waits to ``on_queue`` for the per-stage metric histograms.  With
+``pass_spans=True`` the executor is called as ``execute(model_id, X,
+rider_spans)`` so the gateway can graft the shared batch subtree under every
+rider request.
 """
 from __future__ import annotations
 
@@ -35,6 +43,7 @@ class _Pending:
     rows: int
     t_enqueue: float
     future: asyncio.Future = field(compare=False)
+    span: object = None  # the caller's request span (None/NULL when untraced)
 
 
 class MicroBatcher:
@@ -46,11 +55,19 @@ class MicroBatcher:
     handed back verbatim to every caller in the batch (the gateway uses it
     to learn which model *version* actually served the batch).  Each
     ``submit`` resolves to ``(scores, preds, meta)`` for exactly its rows.
+
+    ``on_queue(model_id, waits_ms)`` (optional) receives each dispatched
+    batch's per-request queue waits; ``tracer`` (a ``repro.obs.Tracer``)
+    turns those waits into ``queue`` spans under each request's span; with
+    ``pass_spans=True`` the executor is called with a third ``rider_spans``
+    argument (the batch's request spans, in batch order).
     """
 
     def __init__(self, execute: ExecuteFn, *, max_batch_rows: int = 256,
                  max_delay_ms: float = 2.0, max_queue_rows: int = 4096,
-                 on_batch: Callable[[str, int, int], None] | None = None):
+                 on_batch: Callable[[str, int, int], None] | None = None,
+                 on_queue: Callable[[str, list], None] | None = None,
+                 tracer=None, pass_spans: bool = False):
         if max_batch_rows <= 0 or max_queue_rows <= 0:
             raise ValueError("batch and queue bounds must be positive")
         self._execute = execute
@@ -58,6 +75,9 @@ class MicroBatcher:
         self.max_delay_s = max_delay_ms / 1e3
         self.max_queue_rows = max_queue_rows
         self._on_batch = on_batch
+        self._on_queue = on_queue
+        self._tracer = tracer
+        self._pass_spans = pass_spans
         self._queues: dict[str, asyncio.Queue] = {}
         self._queued_rows: dict[str, int] = {}
         self._workers: dict[str, asyncio.Task] = {}
@@ -76,8 +96,10 @@ class MicroBatcher:
             )
         return self._queues[model_id]
 
-    async def submit(self, model_id: str, X: np.ndarray):
-        """Enqueue rows; resolves to (scores, preds, meta) for those rows."""
+    async def submit(self, model_id: str, X: np.ndarray, span=None):
+        """Enqueue rows; resolves to (scores, preds, meta) for those rows.
+        ``span`` (optional) is the caller's request span — the queue wait and
+        batch execution spans are committed under it."""
         if self._closed:
             raise RuntimeError("batcher is closed")
         X = np.atleast_2d(np.asarray(X, np.float32))
@@ -90,7 +112,8 @@ class MicroBatcher:
             )
         fut = asyncio.get_running_loop().create_future()
         self._queued_rows[model_id] += rows
-        lane.put_nowait(_Pending(X=X, rows=rows, t_enqueue=time.perf_counter(), future=fut))
+        lane.put_nowait(_Pending(X=X, rows=rows, t_enqueue=time.perf_counter(),
+                                 future=fut, span=span))
         return await fut
 
     # ------------------------------------------------------------- worker
@@ -126,13 +149,38 @@ class MicroBatcher:
                 batch.append(nxt)
                 rows += nxt.rows
             self._queued_rows[model_id] -= rows
+            # dispatch instant: every pending request's micro-batching wait
+            # ends here, together — one queue span per request, one stage
+            # sample per request
+            t_dispatch = time.perf_counter()
+            if self._tracer is not None:
+                for p in batch:
+                    if p.span:
+                        self._tracer.record(
+                            "queue", int(p.t_enqueue * 1e9),
+                            int(t_dispatch * 1e9), parent=p.span, rows=p.rows,
+                        )
+            if self._on_queue is not None:
+                try:
+                    self._on_queue(
+                        model_id,
+                        [(t_dispatch - p.t_enqueue) * 1e3 for p in batch],
+                    )
+                except Exception:
+                    pass  # metrics callbacks must never take down the lane
             try:
                 # concatenate inside the try: ragged feature widths from a
                 # misbehaving client must fail its batch, not kill the worker
                 X = np.concatenate([p.X for p in batch]) if len(batch) > 1 else batch[0].X
-                scores, preds, padded, meta = await loop.run_in_executor(
-                    None, self._execute, model_id, X
-                )
+                if self._pass_spans:
+                    spans = tuple(p.span for p in batch)
+                    scores, preds, padded, meta = await loop.run_in_executor(
+                        None, self._execute, model_id, X, spans
+                    )
+                else:
+                    scores, preds, padded, meta = await loop.run_in_executor(
+                        None, self._execute, model_id, X
+                    )
             except asyncio.CancelledError:  # close() mid-batch: don't strand callers
                 for p in batch + ([carry] if carry is not None else []):
                     if not p.future.done():

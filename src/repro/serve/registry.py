@@ -18,6 +18,7 @@ quantization.
 from __future__ import annotations
 
 import threading
+import time
 from dataclasses import dataclass, field
 
 from repro.core.packing import PackedEnsemble, pack_forest
@@ -32,6 +33,9 @@ class ModelVersion:
     packed: PackedEnsemble
     source: str  # "forest" | "json"
     _engines: dict = field(default_factory=dict, repr=False)
+    # wall-ms spent constructing each route's engine (backend builds, native
+    # compiles) — the cold-start cost ``describe()`` surfaces per model
+    _build_ms: dict = field(default_factory=dict, repr=False)
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
 
     def engine(self, mode: str = "integer", *, backend="reference",
@@ -66,10 +70,15 @@ class ModelVersion:
                None if resolved_plan == "single" else shards)
         with self._lock:
             if key not in self._engines:
+                t0 = time.perf_counter()
                 self._engines[key] = TreeEngine(
                     self.packed, mode=mode, backend=backend, layout=resolved,
                     backend_kwargs=backend_kwargs, plan=plan, shards=shards,
                 )
+                route = "/".join(
+                    str(p) for p in (mode, backend_key, resolved, resolved_plan)
+                )
+                self._build_ms[route] = (time.perf_counter() - t0) * 1e3
             return self._engines[key]
 
 
@@ -131,5 +140,7 @@ class ModelRegistry:
                     name: ir.materialize(name).nbytes_integer() / 1e3
                     for name in ir.materialized_layouts()
                 }
+            if mv._build_ms:
+                d["engine_builds"] = dict(sorted(mv._build_ms.items()))
             out[mid] = d
         return out

@@ -250,7 +250,7 @@ def test_gateway_cache_hit_requests_record_latency(small_forest, shuttle_small):
     mm = gw.metrics.model("m")
     assert mm.hit_requests == 1
     assert mm.requests == 2
-    assert len(mm.latencies_ms) == 2  # the hit request was timed too
+    assert mm.latency.count == 2  # the hit request was timed too
     st = gw.stats()["per_model"]["m"]
     assert st["hit_requests"] == 1 and st["requests"] == 2
     assert np.isfinite(st["p50_ms"]) and np.isfinite(st["p99_ms"])

@@ -53,7 +53,7 @@ def test_serve_driver_gateway(capsys):
     out = capsys.readouterr().out
     assert "gateway == direct engine (bit-identical): True" in out
     assert "hot-swapped shuttle-rf -> v2" in out
-    assert "cache_hit_rate" in out  # metrics table rendered
+    assert "hit_rate" in out and "queue_ms" in out  # metrics table rendered
 
 
 @pytest.mark.slow
