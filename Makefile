@@ -52,7 +52,9 @@ bench:
 # artifact CI uploads
 bench-smoke:
 	REPRO_BENCH_TINY=1 REPRO_BENCH_DEVICES=8 \
-		$(PY) benchmarks/run.py backend_matrix memory_footprint plan_scaling
+		REPRO_BENCH_SNAPSHOT=BENCH_7.json \
+		$(PY) benchmarks/run.py backend_matrix backend_bitvector \
+		memory_footprint plan_scaling
 
 # exactly what .github/workflows/ci.yml runs, as one local target
 ci: test-fast conformance bench-smoke

@@ -49,6 +49,52 @@ def emit(name: str, us_per_call: float, derived: str):
     print(row, flush=True)
 
 
+def host_info() -> dict:
+    """The machine the numbers were taken on: every perf row in the JSON is
+    meaningless without the CPU, its SIMD capabilities, the core count, and
+    the compiler that built the C backends."""
+    import platform
+    import shutil
+    import subprocess
+
+    info = {
+        "machine": platform.machine(),
+        "cores": os.cpu_count(),
+        "python": platform.python_version(),
+    }
+    cpu_model, flags = None, ""
+    try:  # /proc/cpuinfo: "model name" on x86, "Features"/"flags" lists ISA
+        with open("/proc/cpuinfo") as fh:
+            for line in fh:
+                low = line.lower()
+                if cpu_model is None and low.startswith("model name"):
+                    cpu_model = line.split(":", 1)[1].strip()
+                elif low.startswith(("flags", "features")):
+                    flags = line.split(":", 1)[1]
+    except OSError:
+        pass
+    info["cpu"] = cpu_model or platform.processor() or "unknown"
+    fl = set(flags.split())
+    info["avx2"] = "avx2" in fl
+    info["neon"] = bool({"neon", "asimd"} & fl)
+    info["gcc"] = None
+    if shutil.which("gcc"):
+        try:
+            out = subprocess.run(["gcc", "--version"], capture_output=True,
+                                 text=True, timeout=10).stdout
+            info["gcc"] = out.splitlines()[0] if out else None
+        except (OSError, subprocess.SubprocessError):
+            pass
+    return info
+
+
+def _isa_of(eng) -> str:
+    """The SIMD ISA an engine's backend dispatches to ('-' for non-C
+    backends and fused plans with no per-shard backend objects)."""
+    fn = getattr(eng.backend, "simd_isa", None)
+    return (fn() or "-") if fn is not None else "-"
+
+
 def _time(fn, *args, reps=5, warmup=2):
     for _ in range(warmup):
         fn(*args)
@@ -468,35 +514,149 @@ def backend_matrix():
             emit(
                 f"backend_{tag}_b{batch}", us,
                 f"ns_per_row={us * 1e3 / batch:.1f};layout={eng.layout};"
-                f"buckets={sorted(eng.compiled_buckets)}",
+                f"isa={_isa_of(eng)};buckets={sorted(eng.compiled_buckets)}",
             )
 
     if have_gcc:
         # blocked-vs-scalar where row blocking actually bites: a deep forest
-        # whose walks defeat branch prediction and exceed the fast caches
-        deep = _forest(ds["esa"], 8 if TINY else 60,
-                       depth=6 if TINY else 12)
-        _, dpacked, dXte, _ = deep
+        # whose walks defeat branch prediction and exceed the fast caches.
+        # Three table-walk builds of the same artifact: the scalar per-row
+        # while loop, the blocked walk with SIMD pinned off, and the full
+        # blocked walk (runtime-dispatched AVX2/NEON) — the last pair is the
+        # simd-vs-scalar comparison the interleaved gather walker must win.
+        # even TINY keeps this forest genuinely deep.  Trained on structured
+        # data the trees come out imbalanced — most paths terminate well
+        # short of max_depth and the gather walker has little latency to
+        # hide — so the deep rows train on featureless gaussian data, which
+        # fills the depth budget with balanced trees: every walk is
+        # max_depth dependent loads, the regime the SIMD interleave targets.
+        from repro.core.packing import pack_forest
+        from repro.trees.forest import RandomForestClassifier
+        drng = np.random.default_rng(3)
+        n_df = 16
+        dXtr = drng.standard_normal((4000, n_df)).astype(np.float32)
+        dytr = drng.integers(0, 5, 4000)
+        drf = RandomForestClassifier(
+            n_estimators=24 if TINY else 60, max_depth=10 if TINY else 12,
+            seed=3).fit(dXtr, dytr)
+        dpacked = pack_forest(drf)
+        dXte = drng.standard_normal((1024, n_df)).astype(np.float32)
         engs = {
-            br: TreeEngine(dpacked, mode="integer", backend="native_c_table",
-                           backend_kwargs={"block_rows": br})
-            for br in (1, 8)
+            "rows": TreeEngine(dpacked, mode="integer",
+                               backend="native_c_table",
+                               backend_kwargs={"block_rows": 1}),
+            "scalar": TreeEngine(dpacked, mode="integer",
+                                 backend="native_c_table",
+                                 backend_kwargs={"simd": False}),
+            "simd": TreeEngine(dpacked, mode="integer",
+                               backend="native_c_table"),
         }
-        s1, _ = engs[1].predict_scores(dXte[:64])
-        s8, _ = engs[8].predict_scores(dXte[:64])
-        assert (s1 == s8).all(), "blocked table walk diverged from scalar"
-        for batch in batches:
-            if batch > len(dXte):
-                continue
-            X = dXte[:batch]
-            t_scalar = _time(engs[1].predict_scores, X, reps=3)
-            t_blocked = _time(engs[8].predict_scores, X, reps=3)
+        outs = {k: e.predict_scores(dXte[:64])[0] for k, e in engs.items()}
+        for k in ("scalar", "simd"):
+            assert (outs[k] == outs["rows"]).all(), \
+                f"{k} table walk diverged from the per-row walk"
+        # compiled C pays no per-shape XLA compile, so even the TINY smoke
+        # run can measure at the batch sizes the simd-vs-scalar claim is
+        # made for (>= 256 rows; tiny batches are timer noise on CI hosts)
+        dbatches = (256, 1024) if TINY else (64, 256, 1024)
+        for batch in dbatches:
+            X = dXte
+            while len(X) < batch:
+                X = np.concatenate([X, dXte])
+            X = X[:batch]
+            t_rows = _time(engs["rows"].predict_scores, X, reps=10)
+            t_scalar = _time(engs["scalar"].predict_scores, X, reps=10)
+            t_simd = _time(engs["simd"].predict_scores, X, reps=10)
             emit(
-                f"backend_deep_table_blocked_b{batch}", t_blocked,
-                f"ns_per_row={t_blocked * 1e3 / batch:.1f};"
-                f"scalar_ns_per_row={t_scalar * 1e3 / batch:.1f};"
-                f"blocked_speedup={t_scalar / t_blocked:.2f}x",
+                f"backend_deep_table_simd_b{batch}", t_simd,
+                f"ns_per_row={t_simd * 1e3 / batch:.1f};"
+                f"isa={_isa_of(engs['simd'])};"
+                f"scalar_blocked_ns_per_row={t_scalar * 1e3 / batch:.1f};"
+                f"per_row_ns_per_row={t_rows * 1e3 / batch:.1f};"
+                f"simd_speedup_vs_scalar_blocked={t_scalar / t_simd:.2f}x;"
+                f"blocked_speedup_vs_per_row={t_rows / t_scalar:.2f}x",
             )
+
+
+def backend_bitvector():
+    """QuickScorer crossover: the bitvector backends against every node-walk
+    backend in the regime the QuickScorer line of work targets — many trees,
+    shallow depth, large batches.  There the per-row tree walk pays T root
+    dispatches and mispredicted branches per row, while the bitvector scorer
+    streams sorted threshold tables shared by the whole 8-row block.  The
+    forest is wide enough that the if-else translation unit also falls out
+    of the instruction cache — the regime where data-as-arrays must win.
+
+    Every route is asserted bit-identical before timing, and the summary row
+    reports whether the best bitvector backend beat every other backend on
+    this host (the crossover claim, checked live).
+    """
+    from repro.backends import have_c_toolchain
+    from repro.serve.engine import TreeEngine
+
+    data = _datasets()["shuttle"]
+    # the crossover regime needs real width even in the smoke pass — depth-3
+    # trees train in seconds, and batch >= 1024 is where the claim lives
+    # (the TINY test split is smaller than the batch, so rows are tiled;
+    # prediction cost does not care about row uniqueness)
+    # T=1200 even in TINY: at T=600 the if-else C's translation unit still
+    # fits the instruction cache and sits within host-noise distance of the
+    # bitvector scorer; doubling the forest pushes it out (and widens the
+    # margin over the table walk), so the crossover verdict is stable on a
+    # noisy shared CI core.  Depth-3 trees keep the training cost ~seconds.
+    n_trees, depth = 1200, 3
+    batch = 1024 if TINY else 2048
+    rf, packed, Xte, _ = _forest(data, n_trees, depth=depth)
+    X = np.tile(Xte, (batch // len(Xte) + 1, 1))[:batch] \
+        if len(Xte) < batch else Xte[:batch]
+    routes = [("reference", "reference", {}),
+              ("bitvector", "bitvector", {})]
+    if have_c_toolchain():
+        routes += [("native_c", "native_c", {}),
+                   ("native_c_table", "native_c_table", {}),
+                   ("native_c_bitvector", "native_c_bitvector", {})]
+    else:
+        emit("bitvector_native_c", 0, "gcc unavailable; C routes skipped")
+    engines, builds, ref_scores = {}, {}, None
+    for tag, name, kwargs in routes:
+        t0 = time.perf_counter()
+        eng = TreeEngine(packed, mode="integer", backend=name, **kwargs)
+        scores, _ = eng.predict_scores(X[:64])
+        builds[tag] = time.perf_counter() - t0
+        if ref_scores is None:
+            ref_scores = scores
+        else:
+            assert (scores == ref_scores).all(), f"{tag} diverged"
+        engines[tag] = eng
+    # interleaved min-of-rounds timing: on a noisy shared host a transient
+    # slowdown (CPU steal, frequency dip) lasting one measurement would land
+    # entirely on whichever engine happened to be under the timer, flipping
+    # the crossover verdict run to run.  Cycling the engines per round and
+    # keeping each engine's best round measures the machine's capability,
+    # not its worst moment.
+    times = {tag: float("inf") for tag in engines}
+    for _ in range(3):
+        for tag, eng in engines.items():
+            times[tag] = min(times[tag], _time(eng.predict_scores, X, reps=3))
+    for tag, us in times.items():
+        emit(
+            f"bitvector_{tag}_t{n_trees}d{depth}_b{batch}", us,
+            f"ns_per_row={us * 1e3 / batch:.1f};isa={_isa_of(engines[tag])};"
+            f"build_s={builds[tag]:.1f}",
+        )
+    bv_routes = {t for t in times if "bitvector" in t}
+    others = {t: u for t, u in times.items() if t not in bv_routes}
+    if others:
+        best_bv = min(bv_routes, key=times.get)
+        best_other = min(others, key=others.get)
+        emit(
+            f"bitvector_crossover_t{n_trees}d{depth}_b{batch}",
+            times[best_bv],
+            f"winner={best_bv if times[best_bv] < others[best_other] else best_other};"
+            f"best_bitvector={best_bv}:{times[best_bv] * 1e3 / batch:.1f}ns;"
+            f"best_other={best_other}:{others[best_other] * 1e3 / batch:.1f}ns;"
+            f"bitvector_wins={times[best_bv] < others[best_other]}",
+        )
 
 
 def plan_scaling():
@@ -580,6 +740,7 @@ BENCHES = (
     energy_model,
     kernel_identity,
     backend_matrix,
+    backend_bitvector,
     plan_scaling,
     gateway_vs_naive,
     gateway_stage_breakdown,
@@ -607,11 +768,26 @@ def main(argv=None) -> None:
     for row in ROWS:
         name, us, derived = row.split(",", 2)
         records.append({"name": name, "us_per_call": float(us), "derived": derived})
+    payload = {"tiny": TINY, "host": host_info(), "results": records}
     out_json = ART / "bench_results.json"
-    out_json.write_text(json.dumps(
-        {"tiny": TINY, "results": records}, indent=2
-    ) + "\n")
+    out_json.write_text(json.dumps(payload, indent=2) + "\n")
     print(f"# wrote {out} and {out_json}")
+    # REPRO_BENCH_SNAPSHOT=<path>: a repo-root snapshot (``make bench-smoke``
+    # writes BENCH_7.json) — the host block plus one ns/row entry per bench
+    # row that reports one, so perf regressions diff as plain JSON
+    snap_path = os.environ.get("REPRO_BENCH_SNAPSHOT")
+    if snap_path:
+        ns_rows = {}
+        for rec in records:
+            for part in rec["derived"].split(";"):
+                if part.startswith("ns_per_row="):
+                    ns_rows[rec["name"]] = float(part.split("=", 1)[1])
+        snap = pathlib.Path(snap_path)
+        snap.write_text(json.dumps(
+            {"tiny": TINY, "host": payload["host"], "ns_per_row": ns_rows},
+            indent=2,
+        ) + "\n")
+        print(f"# wrote {snap}")
 
 
 if __name__ == "__main__":

@@ -3,15 +3,19 @@
 One protocol (:class:`TreeBackend`: ``predict_partials(X) -> uint32
 accumulators`` — the shardable half of inference — with ``predict_scores(X)
 -> (scores, preds)`` as the finalize-wrapping compatibility surface, plus
-declared :class:`BackendCapabilities`) behind four implementations:
+declared :class:`BackendCapabilities`) behind six implementations:
 
-  * ``reference``      — the jitted jnp node-table walk (all three modes),
-  * ``pallas``         — the VMEM-tiled TPU kernel (flint + integer: one
-                         integer accumulation, two finalizes),
-  * ``native_c``       — the paper's emitted if-else C, compiled once per
-                         model into a shared library and called via ctypes,
-  * ``native_c_table`` — the ragged-layout table-walk C (data-as-arrays,
-                         integer/flint), same shared-library contract.
+  * ``reference``          — the jitted jnp node-table walk (all three modes),
+  * ``pallas``             — the VMEM-tiled TPU kernel (flint + integer: one
+                             integer accumulation, two finalizes),
+  * ``native_c``           — the paper's emitted if-else C, compiled once per
+                             model into a shared library, called via ctypes,
+  * ``native_c_table``     — the ragged-layout table-walk C (data-as-arrays,
+                             SIMD row-blocked), same shared-library contract,
+  * ``bitvector``          — QuickScorer-style traversal-free scoring over
+                             the bitvector layout, data-parallel in jnp,
+  * ``native_c_bitvector`` — the same tables as emitted C, streaming each
+                             feature's sorted threshold list with early exit.
 
 Backends register by name and declare which ForestIR layouts they walk
 (``supported_layouts``/``preferred_layout``); the serving stack (``TreeEngine``
@@ -31,7 +35,9 @@ from repro.backends.base import (
     create_backend,
     register_backend,
 )
+from repro.backends.bitvector import BitvectorBackend
 from repro.backends.native_c import CompiledCBackend, NativeCBackend, have_c_toolchain
+from repro.backends.native_c_bitvector import NativeCBitvectorBackend
 from repro.backends.native_c_table import NativeCTableBackend
 from repro.backends.pallas import PallasBackend
 from repro.backends.reference import ReferenceBackend
@@ -39,8 +45,10 @@ from repro.backends.reference import ReferenceBackend
 __all__ = [
     "BackendCapabilities",
     "BackendUnavailable",
+    "BitvectorBackend",
     "CompiledCBackend",
     "NativeCBackend",
+    "NativeCBitvectorBackend",
     "NativeCTableBackend",
     "PallasBackend",
     "ReferenceBackend",

@@ -27,6 +27,7 @@ per-tree adds.
 from __future__ import annotations
 
 import ctypes
+import os
 import shutil
 import subprocess
 import tempfile
@@ -88,6 +89,19 @@ class CompiledCBackend(TreeBackend):
                 return self._lib
             return self._build_lib()
 
+    @property
+    def _effective_cflags(self) -> tuple:
+        """Constructor cflags + ``REPRO_CC_EXTRA_FLAGS`` from the environment
+        (the CI degradation job's hook).  ``-mno-avx2`` defines no feature
+        macro and cannot disable per-function ``target("avx2")`` attributes,
+        so its intent is translated to ``-DREPRO_NO_SIMD`` as well — one env
+        var degrades every emitted TU to the scalar paths."""
+        extra = tuple(os.environ.get("REPRO_CC_EXTRA_FLAGS", "").split())
+        flags = self._cflags + extra
+        if "-mno-avx2" in extra and "-DREPRO_NO_SIMD" not in flags:
+            flags += ("-DREPRO_NO_SIMD",)
+        return flags
+
     def _build_lib(self):
         if not have_c_toolchain(self._cc):
             raise BackendUnavailable(
@@ -99,7 +113,7 @@ class CompiledCBackend(TreeBackend):
         c_file, so_file = d / "model.c", d / "model.so"
         c_file.write_text(src)
         proc = subprocess.run(
-            [self._cc, *self._cflags, "-shared", "-fPIC",
+            [self._cc, *self._effective_cflags, "-shared", "-fPIC",
              "-o", str(so_file), str(c_file)],
             capture_output=True,
         )
@@ -157,6 +171,25 @@ class CompiledCBackend(TreeBackend):
         if self.deterministic:
             return super().predict_scores(X)  # shared finalize(partials)
         return self._run_batch(X)
+
+    # ---------------------------------------------------------------- SIMD
+    def simd_isa(self):
+        """The ISA the compiled library's batch walk dispatches to on this
+        host: ``"avx2"`` | ``"neon"`` | ``"scalar"`` (TUs without a runtime
+        dispatcher — the if-else cascade — are scalar by construction), or
+        ``None`` when the library cannot build here.  Builds on first call
+        like every other entry point."""
+        try:
+            lib = self._ensure_lib()
+        except BackendUnavailable:
+            return None
+        try:
+            fn = lib.simd_isa
+        except AttributeError:
+            return "scalar"
+        fn.restype = ctypes.c_char_p
+        fn.argtypes = []
+        return fn().decode("ascii")
 
 
 @register_backend

@@ -1,0 +1,39 @@
+"""NativeCBitvectorBackend: the emitted-C QuickScorer bitvector scorer.
+
+The sequential sibling of the jnp ``bitvector`` backend, riding the shared
+``CompiledCBackend`` gcc/ctypes machinery: ``codegen/bitvector_emitter``
+compiles the bitvector layout's per-feature ascending threshold streams and
+false-node leaf masks as static data, and scoring is one linear pass over
+sorted keys per feature (first true compare breaks the stream) followed by a
+lowest-set-bit scan per tree — no per-row tree traversal at all, which is
+where the QuickScorer line of work wins on large-T shallow forests.
+
+Deterministic modes only, and both compile the same integer translation unit
+(uint32 partials out, shared numpy finalize), so scores are bit-identical to
+every other backend across every execution plan — including multi-word
+(>64-leaf) trees, which just widen the per-tree uint64 state.
+"""
+from __future__ import annotations
+
+from repro.backends.base import BackendCapabilities, register_backend
+from repro.backends.native_c import CompiledCBackend
+
+
+@register_backend
+class NativeCBitvectorBackend(CompiledCBackend):
+    name = "native_c_bitvector"
+    capabilities = BackendCapabilities(
+        modes=("flint", "integer"),
+        deterministic_modes=("flint", "integer"),
+        preferred_block_rows=None,
+        compiles_per_shape=False,
+        supported_layouts=("bitvector",),
+        preferred_layout="bitvector",
+    )
+
+    def _emit_source(self) -> str:
+        from repro.codegen.bitvector_emitter import emit_bitvector_c
+
+        # flint and integer share the integer unit (partials + numpy finalize);
+        # the emitter's TU is complete (blocked predict_batch included)
+        return emit_bitvector_c(self.packed, mode="integer")

@@ -47,12 +47,19 @@ class NativeCTableBackend(CompiledCBackend):
     )
 
     def __init__(self, packed, mode: str = "integer", *,
-                 block_rows: int = None, **kwargs):
+                 block_rows: int = None, simd: bool = True, **kwargs):
         super().__init__(packed, mode, **kwargs)
         self.block_rows = (_DEFAULT_BLOCK_ROWS if block_rows is None
                            else int(block_rows))
         if self.block_rows < 1:
             raise ValueError(f"block_rows must be >= 1, got {block_rows}")
+        # simd=False pins the scalar blocked walk per *instance* (the SIMD
+        # blocks compile but the dispatcher is forced off via the same macro
+        # the degradation CI job sets process-wide) — what lets one bench
+        # process measure avx2-vs-scalar on identical artifacts
+        self.simd = bool(simd)
+        if not self.simd:
+            self._cflags = self._cflags + ("-DREPRO_NO_SIMD",)
 
     def _emit_source(self) -> str:
         from repro.codegen.c_emitter import emit_batch_entry

@@ -1,0 +1,273 @@
+"""QuickScorer bitvector C: sorted threshold streams compiled as static data.
+
+The emitted scorer is the sequential form the bitvector layout is built for
+(the jnp backend evaluates the same tables data-parallel instead):
+
+    for each feature f:
+      for each entry e in f's ASCENDING threshold list:
+        if (x[f] <= key[e]) break;        /* every later test is true too */
+        v[tree[e]] &= mask[e];            /* clear the false node's left leaves */
+    for each tree: exit leaf = lowest set bit of v[tree]
+
+No per-row pointer chasing: the hot loop is a linear stream over sorted keys
+with one well-predicted break per feature, and the per-tree state is
+``words`` uint64 accumulators (multi-word for trees beyond 64 leaves).  The
+lowest-set-bit scan uses ``__builtin_ctzll`` under GCC/Clang and a portable
+shift loop otherwise — build with ``-DREPRO_NO_BUILTINS`` to force the
+portable path (the CI degradation job does exactly that).
+
+At batch, the per-row scorer is memory-bound: every row re-streams the whole
+threshold table (~24 B/entry — hundreds of KB per row on large forests).  So
+``predict_batch`` walks blocks of 8 rows through one shared pass over the
+stream, amortizing every table load 8x.  The block keeps the early exit —
+ascending keys make ``x > key`` monotone decreasing per row, so an 8-bit
+``act`` bitset recomputed per entry only ever loses bits and ``act == 0``
+ends the feature for the whole block — and applies masks branch-free:
+``m[k] | (((uint64_t)((act >> r) & 1)) - 1)`` is the mask when row ``r`` is
+active and all-ones (a no-op AND) when it is not.  Live-leaf state is
+row-minor (``v[(t*words + k)*8 + r]``) so one (tree, word) touch lands the
+whole block's lane on a single cache line.
+
+On x86 the blocked apply is lifted to AVX2 (same runtime-cpuid dispatch and
+``simd_isa()`` export as the table-walk unit): one broadcast compare per
+entry yields the 8-row active set, sign-extension widens it to 64-bit lane
+masks, and ``v &= mk | ~act`` folds to two ``andnot`` ops per half-block per
+word — ~3x fewer instructions than the scalar 8-lane apply, which stays in
+the unit as the mandatory fallback (and the whole story on aarch64, where
+this scorer has no NEON block: ``simd_isa()`` honestly reports "scalar").
+
+Integer translation unit only: like the other deterministic C backends, both
+flint and integer modes run the uint32-partials unit and diverge only in the
+shared numpy finalize, so the emitter refuses anything else.  The scalar
+paths need only <stdint.h>.
+"""
+from __future__ import annotations
+
+from repro.codegen.table_emitter import _array_lines, _i32, _simd_prelude
+
+_CTZ64 = [
+    "static int ctz64(uint64_t x) {",
+    "#if defined(__GNUC__) && !defined(REPRO_NO_BUILTINS)",
+    "  return __builtin_ctzll(x);",
+    "#else",
+    "  int n = 0;",
+    "  while (!(x & 1u)) { x >>= 1; ++n; }",
+    "  return n;",
+    "#endif",
+    "}",
+]
+
+
+def _u64(v: int) -> str:
+    return f"0x{int(v) & 0xFFFFFFFFFFFFFFFF:016x}ull"
+
+
+def _i64(v: int) -> str:
+    return f"{int(v)}ll"
+
+
+_BLOCK_ROWS = 8  # rows sharing one pass over the threshold stream
+
+
+def emit_bitvector_c(bv, mode: str = "integer") -> str:
+    """Emit the standalone bitvector scorer for a ``BitvectorEnsemble``.
+
+    Single-row ``predict(data, result)`` over FlInt int32 keys filling uint32
+    partials (the block tail path, and the contract every other emitter
+    shares), the row-blocked ``predict_block8``, the shared ``predict_class``,
+    and a ``predict_batch`` entry that runs full blocks through the blocked
+    scorer and the remainder through ``predict`` — a complete translation
+    unit; nothing from ``c_emitter`` needs appending.
+    """
+    assert mode == "integer", (
+        "the bitvector scorer is emitted once as the integer translation "
+        "unit; flint reuses it and diverges only in the shared finalize"
+    )
+    from repro.codegen.c_emitter import emit_predict_class
+
+    t, c, f, w = bv.n_trees, bv.n_classes, bv.n_features, bv.words
+    lines = ["#include <stdint.h>", ""]
+    lines += _simd_prelude()
+    lines.append("")
+    lines.append(
+        f"/* InTreeger bitvector (QuickScorer-family) ensemble: per-feature\n"
+        f"   ascending threshold streams + false-node leaf masks. trees={t}\n"
+        f"   classes={c} entries={bv.total_entries} words={w} "
+        f"scale={bv.scale} */"
+    )
+    lines += _array_lines("feat_off", "int64_t", bv.feat_offsets, _i64)
+    lines += _array_lines("thr_key", "int32_t", bv.thr_key, _i32)
+    lines += _array_lines("thr_tree", "int32_t", bv.thr_tree, _i32)
+    lines += _array_lines("thr_mask", "uint64_t", bv.thr_mask.reshape(-1), _u64)
+    lines += _array_lines("init_mask", "uint64_t", bv.init_mask.reshape(-1), _u64)
+    lines += _array_lines("leaf_off", "int64_t", bv.leaf_offsets[:-1], _i64)
+    lines += _array_lines(
+        "leaf_fixed", "uint32_t", bv.leaf_fixed.reshape(-1),
+        lambda v: f"{int(v)}u",
+    )
+    lines.append("")
+    lines += _CTZ64
+    lines += [
+        "",
+        "void predict(const int32_t* data, uint32_t* result) {",
+        f"  uint64_t v[{t * w}];",
+        f"  for (int i = 0; i < {t * w}; ++i) v[i] = init_mask[i];",
+        f"  for (int f = 0; f < {f}; ++f) {{",
+        "    const int32_t xf = data[f];",
+        "    for (int64_t e = feat_off[f]; e < feat_off[f + 1]; ++e) {",
+        "      if (xf <= thr_key[e]) break;  /* ascending: rest true too */",
+        f"      uint64_t* vt = v + (int64_t)thr_tree[e] * {w};",
+        f"      const uint64_t* m = thr_mask + e * {w};",
+        f"      for (int k = 0; k < {w}; ++k) vt[k] &= m[k];",
+        "    }",
+        "  }",
+        f"  for (int i = 0; i < {c}; ++i) result[i] = 0;",
+        f"  for (int t = 0; t < {t}; ++t) {{",
+        "    int leaf = 0;",
+        f"    for (int k = 0; k < {w}; ++k) {{",
+        f"      const uint64_t word = v[t * {w} + k];",
+        "      if (word) { leaf = k * 64 + ctz64(word); break; }",
+        "    }",
+        f"    const uint32_t* lf = leaf_fixed + (leaf_off[t] + leaf) * {c};",
+        f"    for (int i = 0; i < {c}; ++i) result[i] += lf[i];",
+        "  }",
+        "}",
+        "",
+    ]
+    lines += emit_predict_class(c, "uint32_t", "int32_t")
+    r = _BLOCK_ROWS
+    # leaf extraction + class adds shared by the scalar and AVX2 blocks
+    # (identical add order per tree -> bit-identical partials everywhere)
+    block_tail = [
+        f"  for (long i = 0; i < {r * c}; ++i) scores[i] = 0;",
+        f"  for (int t = 0; t < {t}; ++t) {{",
+        f"    for (int rr = 0; rr < {r}; ++rr) {{",
+        "      int leaf = 0;",
+        f"      for (int k = 0; k < {w}; ++k) {{",
+        f"        const uint64_t word = v[(t * {w} + k) * {r} + rr];",
+        "        if (word) { leaf = k * 64 + ctz64(word); break; }",
+        "      }",
+        f"      const uint32_t* lf = leaf_fixed + (leaf_off[t] + leaf) * {c};",
+        f"      uint32_t* out = scores + rr * {c};",
+        f"      for (int i = 0; i < {c}; ++i) out[i] += lf[i];",
+        "    }",
+        "  }",
+        "}",
+    ]
+    lines += [
+        "",
+        f"/* {r} rows share ONE pass over the threshold stream (the per-row",
+        "   scorer re-streams the whole table per row and is memory-bound at",
+        "   batch).  act = the block's still-active rows for this entry,",
+        "   recomputed branch-free each entry: ascending keys make x > key",
+        "   monotone decreasing, so act only loses bits and act == 0 ends",
+        "   the feature for everyone.  Inactive rows AND with all-ones. */",
+        f"static void predict_block{r}(const int32_t* data, uint32_t* scores) {{",
+        f"  uint64_t v[{t * w * r}];  /* row-minor: v[(t*{w} + k)*{r} + rr] */",
+        f"  for (int i = 0; i < {t * w}; ++i) {{",
+        "    const uint64_t iv = init_mask[i];",
+        f"    for (int rr = 0; rr < {r}; ++rr) v[i * {r} + rr] = iv;",
+        "  }",
+        f"  for (int f = 0; f < {f}; ++f) {{",
+        f"    int32_t xf[{r}];",
+        f"    for (int rr = 0; rr < {r}; ++rr) xf[rr] = data[rr * {f} + f];",
+        "    for (int64_t e = feat_off[f]; e < feat_off[f + 1]; ++e) {",
+        "      const int32_t key = thr_key[e];",
+        "      uint32_t act = 0;",
+        f"      for (int rr = 0; rr < {r}; ++rr)",
+        "        act |= (uint32_t)(xf[rr] > key) << rr;",
+        "      if (!act) break;  /* ascending: rest true for no row either */",
+        f"      uint64_t* vt = v + (int64_t)thr_tree[e] * {w * r};",
+        f"      const uint64_t* m = thr_mask + e * {w};",
+        f"      for (int k = 0; k < {w}; ++k) {{",
+        "        const uint64_t mk = m[k];",
+        f"        uint64_t* vp = vt + k * {r};",
+        f"        for (int rr = 0; rr < {r}; ++rr)",
+        "          vp[rr] &= mk | (((uint64_t)((act >> rr) & 1u)) - 1u);",
+        "      }",
+        "    }",
+        "  }",
+    ] + block_tail + [
+        "",
+        "#if defined(REPRO_HAVE_AVX2)",
+        "/* The same block, mask application lifted to AVX2: one broadcast",
+        "   compare per entry gives the 8-row active set; sign-extending the",
+        "   32-bit compare lanes yields 64-bit all-ones/zero row masks, and",
+        "   v &= mk | ~act folds to andnot(andnot(mk, act), v) — two ops per",
+        "   half-block per word instead of the scalar 8-lane or/and chain. */",
+        '__attribute__((target("avx2")))',
+        f"static void predict_block{r}_avx2(const int32_t* data, uint32_t* scores) {{",
+        f"  uint64_t v[{t * w * r}];",
+        f"  for (int i = 0; i < {t * w}; ++i) {{",
+        "    const __m256i iv = _mm256_set1_epi64x((long long)init_mask[i]);",
+        f"    _mm256_storeu_si256((__m256i*)(v + i * {r}), iv);",
+        f"    _mm256_storeu_si256((__m256i*)(v + i * {r} + 4), iv);",
+        "  }",
+        "  const __m256i vstride = _mm256_setr_epi32("
+        + ", ".join(str(k * f) for k in range(r)) + ");",
+        f"  for (int f = 0; f < {f}; ++f) {{",
+        "    const __m256i xv = _mm256_i32gather_epi32(data + f, vstride, 4);",
+        "    for (int64_t e = feat_off[f]; e < feat_off[f + 1]; ++e) {",
+        "      const __m256i cmp = _mm256_cmpgt_epi32(",
+        "          xv, _mm256_set1_epi32(thr_key[e]));",
+        "      if (!_mm256_movemask_epi8(cmp)) break;  /* no active rows */",
+        "      const __m256i alo = _mm256_cvtepi32_epi64("
+        "_mm256_castsi256_si128(cmp));",
+        "      const __m256i ahi = _mm256_cvtepi32_epi64("
+        "_mm256_extracti128_si256(cmp, 1));",
+        f"      uint64_t* vt = v + (int64_t)thr_tree[e] * {w * r};",
+        f"      const uint64_t* m = thr_mask + e * {w};",
+        f"      for (int k = 0; k < {w}; ++k) {{",
+        "        const __m256i mk = _mm256_set1_epi64x((long long)m[k]);",
+        f"        uint64_t* vp = vt + k * {r};",
+        "        __m256i lo = _mm256_loadu_si256((const __m256i*)vp);",
+        "        __m256i hi = _mm256_loadu_si256((const __m256i*)(vp + 4));",
+        "        lo = _mm256_andnot_si256(_mm256_andnot_si256(mk, alo), lo);",
+        "        hi = _mm256_andnot_si256(_mm256_andnot_si256(mk, ahi), hi);",
+        "        _mm256_storeu_si256((__m256i*)vp, lo);",
+        "        _mm256_storeu_si256((__m256i*)(vp + 4), hi);",
+        "      }",
+        "    }",
+        "  }",
+    ] + block_tail + [
+        "#endif  /* REPRO_HAVE_AVX2 */",
+        "",
+        "/* runtime dispatch mirrors the table-walk unit, but this scorer has",
+        "   no NEON block: scalar is the honest answer off x86-with-AVX2. */",
+        "static const char* g_simd_isa = 0;",
+        "",
+        "static void pick_simd(void) {",
+        "#if defined(REPRO_HAVE_AVX2)",
+        '  if (__builtin_cpu_supports("avx2")) { g_simd_isa = "avx2"; return; }',
+        "#endif",
+        '  g_simd_isa = "scalar";',
+        "}",
+        "",
+        "const char* simd_isa(void) {",
+        "  if (!g_simd_isa) pick_simd();",
+        "  return g_simd_isa;",
+        "}",
+        "",
+        "void predict_batch(const int32_t* data, long n_rows,",
+        "                   uint32_t* scores, int32_t* preds) {",
+        "  if (!g_simd_isa) pick_simd();",
+        "  long r0 = 0;",
+        "#if defined(REPRO_HAVE_AVX2)",
+        "  if (g_simd_isa[0] == 'a')",
+        f"    for (; r0 + {r} <= n_rows; r0 += {r})",
+        f"      predict_block{r}_avx2(data + r0 * {f}, scores + r0 * {c});",
+        "#endif",
+        f"  for (; r0 + {r} <= n_rows; r0 += {r})",
+        f"    predict_block{r}(data + r0 * {f}, scores + r0 * {c});",
+        "  for (; r0 < n_rows; ++r0)",
+        f"    predict(data + r0 * {f}, scores + r0 * {c});",
+        "  for (long rr = 0; rr < n_rows; ++rr) {",
+        f"    const uint32_t* out = scores + rr * {c};",
+        "    int best = 0;",
+        f"    for (int i = 1; i < {c}; ++i) if (out[i] > out[best]) best = i;",
+        "    preds[rr] = best;",
+        "  }",
+        "}",
+        "",
+    ]
+    return "\n".join(lines)

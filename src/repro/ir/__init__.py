@@ -6,7 +6,8 @@ This package makes the layout a first-class axis instead:
 
     forest  --quantize once-->  ForestIR  --materialize-->  layout artifact
                                 (canonical,                  (padded | ragged |
-                                 unpadded)                    leaf_major)
+                                 unpadded)                    leaf_major |
+                                                              bitvector)
 
 ``ForestIR`` (``forest_ir.py``) holds the canonical quantized forest — FlInt
 int32 threshold keys, uint32 fixed-point leaves, per-tree node counts, all
@@ -23,8 +24,10 @@ from repro.ir.layouts import (
     materialize,
     register_layout,
 )
+from repro.ir.bitvector import BitvectorEnsemble  # registers "bitvector"
 
 __all__ = [
+    "BitvectorEnsemble",
     "ForestIR",
     "RaggedEnsemble",
     "available_layouts",

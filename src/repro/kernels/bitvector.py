@@ -1,0 +1,123 @@
+"""jnp reference path for the QuickScorer ``bitvector`` layout.
+
+The C bitvector scorer (``codegen/bitvector_emitter``) streams each feature's
+ascending threshold list and breaks at the first true compare — a sequential
+early-exit that XLA has no use for.  This path exploits the same
+order-independence the early exit rests on: the set of masks a row applies is
+exactly ``{e : x[feat_e] > key_e}`` (every false node), regardless of the
+order they are ANDed in.  So the kernel evaluates ALL entries data-parallel —
+a tree-major padded view of the layout's entries, one fori_loop step per
+entry slot, each step vectorized over (batch, trees) — and the bitvector
+algebra (AND of clearing masks == AND-NOT of an OR of cleared-bit sets)
+turns the reduction into a plain commutative OR accumulator.
+
+uint64 is unavailable under JAX's default x64-disabled config, so bitvectors
+run as pairs of uint32 words: ``mask.view(np.uint32)`` on the layout's
+little-endian uint64 words yields words low-to-high, i.e. uint32 word
+``b // 32`` holds leaf bit ``b`` — the leaf-order scan below only needs that.
+
+The exit leaf (lowest surviving bit) is branch-free: first nonzero uint32
+word via ``argmax(v != 0)``, lowest set bit via the two's-complement isolate
+``w & (~w + 1)`` and ``population_count(lsb - 1)``.  Partials are the same
+uint32 fixed-point sums as every other backend — the per-tree uint32 adds
+commute mod 2^32, so summing in tree order is bit-identical to the reference
+scan — and finalize stays the one shared numpy step.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.flint import float_to_key
+
+_NEVER_KEY = np.int32(0x7FFFFFFF)  # int32 max: ``key > this`` is unsatisfiable
+
+
+def bitvector_device_arrays(bv) -> dict:
+    """Build the tree-major padded entry view the jitted kernel consumes.
+
+    The layout stores entries feature-major (the C stream order); the jnp
+    kernel wants one (T, M) slot grid — M = max entries per tree — so each
+    fori_loop step gathers a (B, T) compare and ORs a (B, T, W32) clear set.
+    Padding slots get ``_NEVER_KEY`` *and* an all-zero clear set, so they are
+    inert twice over.  Pure numpy, run once per backend build.
+    """
+    T, F = bv.n_trees, bv.n_features
+    W32 = 2 * bv.words
+    E = bv.total_entries
+    # per-entry feature ids back out of the feature-major CSR
+    feat_of_entry = np.repeat(
+        np.arange(F, dtype=np.int32), np.diff(bv.feat_offsets).astype(np.int64)
+    )
+    counts = (np.bincount(bv.thr_tree, minlength=T) if E
+              else np.zeros(T, np.int64))
+    M = int(counts.max()) if E else 0
+    entry_feat = np.zeros((T, M), np.int32)
+    entry_key = np.full((T, M), _NEVER_KEY, np.int32)
+    # ~mask = the bits this false node CLEARS; all-zero rows clear nothing
+    inv_mask = np.zeros((T, M, W32), np.uint32)
+    inv_all = (~bv.thr_mask).view(np.uint32).reshape(E, W32)
+    slot = np.zeros(T, np.int64)
+    for e in range(E):
+        t = int(bv.thr_tree[e])
+        j = slot[t]
+        entry_feat[t, j] = feat_of_entry[e]
+        entry_key[t, j] = bv.thr_key[e]
+        inv_mask[t, j] = inv_all[e]
+        slot[t] = j + 1
+    return dict(
+        entry_feat=jnp.asarray(entry_feat),
+        entry_key=jnp.asarray(entry_key),
+        inv_mask=jnp.asarray(inv_mask),
+        init_mask=jnp.asarray(bv.init_mask.view(np.uint32).reshape(T, W32)),
+        leaf_off=jnp.asarray(bv.leaf_offsets[:-1].astype(np.int32)),
+        leaf_fixed=jnp.asarray(bv.leaf_fixed),
+        n_entry_slots=M,
+    )
+
+
+@partial(jax.jit, static_argnames=("n_slots",))
+def _bitvector_partials(arrays, keys, n_slots: int):
+    """(B, F) int32 FlInt keys -> (B, C) uint32 partial accumulators."""
+    entry_feat = arrays["entry_feat"]   # (T, M) int32
+    entry_key = arrays["entry_key"]     # (T, M) int32
+    inv_mask = arrays["inv_mask"]       # (T, M, W32) uint32 cleared-bit sets
+    init = arrays["init_mask"]          # (T, W32) uint32
+    b = keys.shape[0]
+    t, w32 = init.shape
+
+    def apply_slot(j, cleared):
+        kv = keys[:, entry_feat[:, j]]                      # (B, T)
+        applied = kv > entry_key[None, :, j]                # false nodes
+        clr = jnp.where(applied[:, :, None], inv_mask[None, :, j, :],
+                        jnp.uint32(0))
+        return cleared | clr
+
+    cleared = jnp.zeros((b, t, w32), jnp.uint32)
+    if n_slots:  # static; all-stump forests have no internal nodes at all
+        cleared = jax.lax.fori_loop(0, n_slots, apply_slot, cleared)
+    v = init[None] & ~cleared                               # live-leaf vectors
+    # lowest surviving bit: first nonzero word, then isolate its lowest bit
+    w_idx = jnp.argmax(v != 0, axis=-1)                     # (B, T)
+    word = jnp.take_along_axis(v, w_idx[..., None], axis=-1)[..., 0]
+    lsb = word & (~word + jnp.uint32(1))
+    bit = jax.lax.population_count(lsb - jnp.uint32(1)).astype(jnp.int32)
+    leaf = w_idx.astype(jnp.int32) * 32 + bit               # (B, T)
+    rows = arrays["leaf_off"][None, :] + leaf               # (B, T) leaf rows
+    contrib = arrays["leaf_fixed"][rows]                    # (B, T, C) uint32
+    return jnp.sum(contrib, axis=1, dtype=jnp.uint32)
+
+
+def make_bitvector_partials_fn(bv):
+    """Close over the device tables; return jitted ``X -> uint32 partials``."""
+    arrays = bitvector_device_arrays(bv)
+    n_slots = arrays.pop("n_entry_slots")
+
+    def fn(x):
+        keys = float_to_key(jnp.asarray(x, jnp.float32))
+        return _bitvector_partials(arrays, keys, n_slots)
+
+    return jax.jit(fn)

@@ -152,6 +152,15 @@ class TreeEngine:
         """True when outputs are bit-exact integer scores (cacheable)."""
         return self.plan.deterministic
 
+    def simd_isa(self):
+        """The SIMD ISA the serving backend dispatches to ("avx2" / "neon" /
+        "scalar" for the C backends), or ``None`` for backends without the
+        surface (JAX paths, fused device-parallel plans).  May trigger the
+        backend's first build — callers wanting a free probe should ask
+        after serving has started."""
+        fn = getattr(self.backend, "simd_isa", None)
+        return fn() if fn is not None else None
+
     def drain_shard_timings(self) -> dict:
         """Per-shard wall time since the last drain (``{label: (ms, calls)}``)
         — what the gateway records into ``serve.metrics`` per batch."""

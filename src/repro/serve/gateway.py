@@ -157,6 +157,9 @@ class Gateway:
         mm.record_shards(eng.drain_shard_timings())
         mm.record_stages(eng.drain_stage_timings())
         mm.record_compiles(eng.drain_compile_timings())
+        # dispatched SIMD ISA (free here: the batch above already built the
+        # backend, so the probe never triggers a compile)
+        mm.record_isa(eng.simd_isa())
         # meta = the version that actually computed, so cache fills are keyed
         # consistently even when a hot-swap lands between submit and dispatch
         return scores, preds, eng.padded_rows(len(X)), mv.version

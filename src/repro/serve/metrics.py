@@ -52,6 +52,10 @@ class ModelMetrics:
     # one-time compile/warm wall-ms per padded row bucket (max wins: a
     # bucket recompiles after a hot-swap, keep the worst cold-start)
     compile_ms: dict = field(default_factory=dict)
+    # SIMD ISA the serving backend dispatches to ("avx2"/"neon"/"scalar" for
+    # C backends; "-" before the first batch and for backends without the
+    # surface) — recorded by the gateway after each dispatch
+    isa: str = "-"
     t_first: float = 0.0
     t_last: float = 0.0
 
@@ -114,6 +118,11 @@ class ModelMetrics:
         for bucket, ms in timings.items():
             self.compile_ms[bucket] = max(self.compile_ms.get(bucket, 0.0), ms)
 
+    def record_isa(self, isa) -> None:
+        """Record the backend's dispatched SIMD ISA (None keeps "-")."""
+        if isa:
+            self.isa = str(isa)
+
     def _stage_mean(self, stage: str) -> float:
         h = self.stages.get(stage)
         return h.mean if h is not None and h.count else float("nan")
@@ -144,6 +153,7 @@ class ModelMetrics:
             "pad_efficiency": self.batched_rows / self.padded_rows if self.padded_rows else 0.0,
             "cache_hit_rate": self.cache_hits / probed if probed else 0.0,
             "cache_hits": self.cache_hits,
+            "isa": self.isa,
             # the per-stage attribution columns: mean wall ms per stage
             # sample — where a request's latency actually went
             **{f"{stage}_ms": self._stage_mean(stage) for stage in _STAGE_COLUMNS},
@@ -164,7 +174,8 @@ class ModelMetrics:
         return out
 
 
-# (header, stats key) pairs; "shards" renders the shard-label count
+# (header, stats key) pairs; "shards" renders the shard-label count and
+# "isa" is the one string-valued cell (the C backends' dispatched SIMD ISA)
 _TABLE_COLS = (
     ("requests", "requests"), ("hit_req", "hit_requests"), ("rows", "rows"),
     ("rejected", "rejected"), ("rows_per_s", "rows_per_s"),
@@ -172,7 +183,7 @@ _TABLE_COLS = (
     ("queue_ms", "queue_ms"), ("pad_ms", "pad_ms"), ("shard_ms", "shard_ms"),
     ("final_ms", "finalize_ms"), ("occup", "batch_occupancy"),
     ("pad_eff", "pad_efficiency"), ("hit_rate", "cache_hit_rate"),
-    ("shards", "shards"),
+    ("isa", "isa"), ("shards", "shards"),
 )
 
 
@@ -215,6 +226,8 @@ class MetricsRegistry:
                     # zero-sample stages and empty latency histograms are
                     # NaN: render an empty cell, not a bare "nan"
                     cells.append(f"{v:10.3f}" if v == v else f"{'-':>10s}")
+                elif isinstance(v, str):
+                    cells.append(f"{v:>10s}")
                 else:
                     cells.append(f"{v:10d}")
             lines.append(f"{mid:14s} " + " ".join(cells))

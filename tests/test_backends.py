@@ -28,8 +28,10 @@ from repro.serve.engine import TreeEngine, bucket_rows
 ALL_BACKENDS = [
     "reference",
     "pallas",
+    "bitvector",
     pytest.param("native_c", marks=pytest.mark.requires_gcc),
     pytest.param("native_c_table", marks=pytest.mark.requires_gcc),
+    pytest.param("native_c_bitvector", marks=pytest.mark.requires_gcc),
 ]
 
 
@@ -57,10 +59,9 @@ def _scores(backend, rows):
 
 # ------------------------------------------------------------------ registry
 
-def test_registry_has_all_four_backends():
-    assert {"reference", "pallas", "native_c", "native_c_table"} <= set(
-        available_backends()
-    )
+def test_registry_has_all_six_backends():
+    assert {"reference", "pallas", "native_c", "native_c_table",
+            "bitvector", "native_c_bitvector"} <= set(available_backends())
 
 
 def test_registry_unknown_name_lists_available(small_packed):
@@ -102,6 +103,17 @@ def test_capability_flags():
     assert set(tbl.modes) == {"flint", "integer"}  # integer-compare modes only
     assert tbl.preferred_block_rows == 8  # row-blocked table walk default
     assert not tbl.compiles_per_shape
+    # the QuickScorer pair both walk (only) the bitvector layout; the jnp
+    # path jit-compiles per batch shape, the C path takes any row count
+    bv = backend_class("bitvector").capabilities
+    cbv = backend_class("native_c_bitvector").capabilities
+    for caps in (bv, cbv):
+        assert set(caps.modes) == {"flint", "integer"}
+        assert caps.deterministic_modes == ("flint", "integer")
+        assert caps.supported_layouts == ("bitvector",)
+        assert caps.preferred_layout == "bitvector"
+    assert bv.compiles_per_shape
+    assert not cbv.compiles_per_shape
 
 
 def test_backend_rejects_unsupported_layout(small_packed):

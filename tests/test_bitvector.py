@@ -1,0 +1,209 @@
+"""Property tests for the QuickScorer ``bitvector`` layout and its backends.
+
+The layout's correctness rests on three claims, each checked directly here
+(the conformance matrices in ``test_backends.py``/``test_plans.py`` cover the
+end-to-end scores):
+
+  1. *Round trip*: the per-feature ascending threshold streams encode exactly
+     the same (tree, feature, key) comparisons as the ragged CSR's internal
+     nodes — nothing dropped, nothing invented — and each feature's segment
+     really is sorted ascending (what the C early exit relies on).
+  2. *Mask algebra*: ANDing the masks of exactly the false nodes
+     (``x > key``) into the init mask leaves the ragged walk's exit leaf as
+     the lowest set bit — including >64-leaf trees, where the bitvector
+     spans multiple uint64 words.
+  3. *Degradation*: the emitted C stays bit-identical with the GCC builtins
+     and the SIMD dispatcher compiled out (``-DREPRO_NO_BUILTINS`` /
+     ``-DREPRO_NO_SIMD`` / ``-mno-avx2``), and ``simd_isa()`` reports what
+     actually dispatches.
+
+Randomization is seed-parametrized (deterministic per run) rather than
+hypothesis-driven: the suite must exercise the properties even where
+hypothesis is not installed (see the conftest shim).
+"""
+import numpy as np
+import pytest
+
+from forest_cases import DEGENERATE_FORESTS, chain_tree, forest_from_trees, stump
+from repro.backends import create_backend
+from repro.ir import ForestIR
+
+SEEDS = [0, 1, 2, 3, 4]
+
+
+def _random_forest(seed, n_trees=10, depth=6, n_classes=5, n_features=7):
+    from repro.trees.forest import RandomForestClassifier
+
+    rng = np.random.default_rng(seed)
+    Xtr = rng.standard_normal((1500, n_features)).astype(np.float32)
+    ytr = rng.integers(0, n_classes, 1500)
+    return RandomForestClassifier(
+        n_estimators=n_trees, max_depth=depth, seed=seed
+    ).fit(Xtr, ytr)
+
+
+def _multiword_forest():
+    """One 71-leaf chain (needs two uint64 words) plus small companions."""
+    return forest_from_trees(
+        [chain_tree(70, 3), chain_tree(5, 3), stump([0.2, 0.3, 0.5])], 3, 4
+    )
+
+
+def _all_case_irs(seed):
+    yield f"random{seed}", ForestIR.from_forest(_random_forest(seed))
+    for name, mk in DEGENERATE_FORESTS.items():
+        yield name, ForestIR.from_forest(mk())
+    yield "multiword", ForestIR.from_forest(_multiword_forest())
+
+
+def _entry_features(bv):
+    """Per-entry feature ids recovered from the feature-major CSR."""
+    return np.repeat(
+        np.arange(bv.n_features, dtype=np.int32),
+        np.diff(bv.feat_offsets).astype(np.int64),
+    )
+
+
+def _ragged_walk_leaf(ragged, t, keys):
+    """Reference traversal of tree ``t``: global exit-node index."""
+    n = int(ragged.roots[t])
+    while ragged.feature[n] >= 0:
+        if keys[ragged.feature[n]] > ragged.threshold_key[n]:
+            n = int(ragged.right[n])
+        else:
+            n = int(ragged.left[n])
+    return n
+
+
+# ------------------------------------------------------------- property 1
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_threshold_streams_round_trip_ragged_comparisons(seed):
+    """The sorted streams hold exactly the ragged internal nodes'
+    (tree, feature, key) triples, ascending by key within each feature."""
+    for name, ir in _all_case_irs(seed):
+        bv = ir.materialize("bitvector")
+        ragged = ir.materialize("ragged")
+        feat = _entry_features(bv)
+        got = sorted(zip(bv.thr_tree.tolist(), feat.tolist(),
+                         bv.thr_key.tolist()))
+        internal = np.flatnonzero(ragged.feature >= 0)
+        tree_of = np.searchsorted(ragged.node_offsets[1:], internal,
+                                  side="right")
+        want = sorted(zip(tree_of.tolist(),
+                          ragged.feature[internal].tolist(),
+                          ragged.threshold_key[internal].tolist()))
+        assert got == want, f"comparison multiset mismatch ({name})"
+        for f in range(bv.n_features):
+            seg = bv.thr_key[bv.feat_offsets[f]:bv.feat_offsets[f + 1]]
+            assert (np.diff(seg) >= 0).all(), f"stream not ascending ({name})"
+
+
+# ------------------------------------------------------------- property 2
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_mask_algebra_reproduces_ragged_exit_leaf(seed):
+    """numpy re-derivation of the scorer: AND the false nodes' masks in
+    *arbitrary* (table) order, take the lowest surviving bit, and compare the
+    leaf's class contributions against the ragged walk's exit node."""
+    from repro.core.flint import float_to_key_np
+
+    rng = np.random.default_rng(seed + 100)
+    for name, ir in _all_case_irs(seed):
+        bv = ir.materialize("bitvector")
+        ragged = ir.materialize("ragged")
+        feat = _entry_features(bv)
+        X = rng.normal(0.0, 4.0, (17, ir.n_features)).astype(np.float32)
+        K = float_to_key_np(X)
+        for keys in K:
+            v = bv.init_mask.copy()  # (T, words)
+            false_e = np.flatnonzero(keys[feat] > bv.thr_key)
+            for e in false_e:
+                v[bv.thr_tree[e]] &= bv.thr_mask[e]
+            for t in range(bv.n_trees):
+                assert v[t].any(), f"no surviving leaf ({name}, tree {t})"
+                words = v[t]
+                k = int(np.flatnonzero(words)[0])
+                w = int(words[k])
+                leaf = 64 * k + (w & -w).bit_length() - 1
+                got = bv.leaf_fixed[bv.leaf_offsets[t] + leaf]
+                node = _ragged_walk_leaf(ragged, t, keys)
+                np.testing.assert_array_equal(
+                    got, ragged.leaf_fixed[node],
+                    err_msg=f"exit leaf mismatch ({name}, tree {t})")
+
+
+def test_multiword_layout_shape():
+    """>64-leaf trees widen the bitvector: words == 2, init masks populate
+    exactly n_leaves bits, and the wide tree's bits spill into word 1."""
+    ir = ForestIR.from_forest(_multiword_forest())
+    bv = ir.materialize("bitvector")
+    assert bv.words == 2
+    assert int(bv.n_leaves.max()) == 71
+    for t in range(bv.n_trees):
+        pop = sum(int(w).bit_count() for w in bv.init_mask[t].tolist())
+        assert pop == int(bv.n_leaves[t])
+    wide = int(np.argmax(bv.n_leaves))
+    assert bv.init_mask[wide, 1] != 0  # leaves 64..70 live in word 1
+
+
+# ------------------------------------------------------------- property 3
+
+@pytest.mark.requires_gcc
+@pytest.mark.parametrize("flags,forces_scalar", [
+    ("-DREPRO_NO_BUILTINS", False),   # portable ctz; SIMD dispatch untouched
+    ("-mno-avx2 -DREPRO_NO_BUILTINS", True),
+])
+def test_degraded_builds_stay_bit_identical(monkeypatch, flags, forces_scalar):
+    """The portable ctz loop and the SIMD-less build produce the same bits
+    as the full build — the CI degradation job's in-process mirror."""
+    ir = ForestIR.from_forest(_multiword_forest())
+    rows = np.random.default_rng(9).normal(0, 4, (41, 4)).astype(np.float32)
+    ref = create_backend("reference", ir.materialize("padded"),
+                         mode="integer")
+    want = np.asarray(ref.predict_partials(rows))
+    monkeypatch.setenv("REPRO_CC_EXTRA_FLAGS", flags)
+    for backend, layout in [("native_c_bitvector", "bitvector"),
+                            ("native_c_table", "ragged")]:
+        b = create_backend(backend, ir.materialize(layout), mode="integer")
+        np.testing.assert_array_equal(
+            np.asarray(b.predict_partials(rows)), want,
+            err_msg=f"{backend} under {flags}")
+        if forces_scalar:
+            assert b.simd_isa() == "scalar"
+
+
+@pytest.mark.requires_gcc
+def test_simd_isa_surface(small_packed):
+    """simd_isa() reports the dispatched ISA: a real one for the blocked
+    table walk, scalar for dispatcher-less TUs and pinned-scalar builds."""
+    ir = small_packed.to_ir()
+    ragged = ir.materialize("ragged")
+    blocked = create_backend("native_c_table", ragged, mode="integer")
+    assert blocked.simd_isa() in ("avx2", "neon", "scalar")
+    pinned = create_backend("native_c_table", ragged, mode="integer",
+                            simd=False)
+    assert pinned.simd_isa() == "scalar"
+    # TUs without a runtime dispatcher are scalar by construction
+    assert create_backend("native_c", small_packed,
+                          mode="integer").simd_isa() == "scalar"
+    # the bitvector unit dispatches AVX2 or scalar only (no NEON block)
+    assert create_backend("native_c_bitvector", ir.materialize("bitvector"),
+                          mode="integer").simd_isa() in ("avx2", "scalar")
+
+
+@pytest.mark.requires_gcc
+@pytest.mark.parametrize("n_rows", [1, 7, 8, 9, 16, 41])
+def test_blocked_bitvector_c_every_tail_shape(n_rows):
+    """predict_batch mixes 8-row blocks with a scalar tail; every split of
+    full blocks + remainder must match the reference bit-for-bit."""
+    ir = ForestIR.from_forest(_random_forest(11, n_trees=6, depth=5))
+    rows = np.random.default_rng(n_rows).normal(
+        0, 3, (n_rows, ir.n_features)).astype(np.float32)
+    ref = create_backend("reference", ir.materialize("padded"),
+                         mode="integer")
+    cbv = create_backend("native_c_bitvector", ir.materialize("bitvector"),
+                         mode="integer")
+    np.testing.assert_array_equal(
+        np.asarray(cbv.predict_partials(rows)),
+        np.asarray(ref.predict_partials(rows)))

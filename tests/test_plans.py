@@ -39,8 +39,10 @@ from repro.serve.engine import TreeEngine
 ALL_BACKENDS = [
     "reference",
     "pallas",
+    "bitvector",
     pytest.param("native_c", marks=pytest.mark.requires_gcc),
     pytest.param("native_c_table", marks=pytest.mark.requires_gcc),
+    pytest.param("native_c_bitvector", marks=pytest.mark.requires_gcc),
 ]
 
 # the acceptance matrix: every plan spec below x every backend x its layouts
