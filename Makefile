@@ -31,7 +31,8 @@ obs-artifacts:
 
 # cross-(backend, layout, variant, plan) bit-identity suite: reference /
 # pallas (gather + leaf_major linear scan) / native_c / native_c_table
-# (block_rows 1/4/8) x padded / ragged / leaf_major x {single,
+# (block_rows 1/4/8) / native_c_bitvector (interleave widths K=1/4/8)
+# x padded / ragged / leaf_major / bitvector x {single,
 # tree_parallel(2,3,8), row_parallel(2,4)}.  XLA is forced to 8 host
 # devices so the tree-parallel shard_map path runs for real (the same
 # configuration CI uses) — without the flag those cases fall back to the
@@ -52,7 +53,7 @@ bench:
 # artifact CI uploads
 bench-smoke:
 	REPRO_BENCH_TINY=1 REPRO_BENCH_DEVICES=8 \
-		REPRO_BENCH_SNAPSHOT=BENCH_7.json \
+		REPRO_BENCH_SNAPSHOT=BENCH_8.json \
 		$(PY) benchmarks/run.py backend_matrix backend_bitvector \
 		memory_footprint plan_scaling
 

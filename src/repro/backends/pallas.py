@@ -33,6 +33,13 @@ from repro.core.packing import PackedEnsemble
 
 _DEFAULT_BLOCK_B = 256  # the kernel wrapper's row-tile default
 
+# when impl="auto" resolved to the linear scan, batches below this row count
+# run the gather walk instead: the scan's per-cell prefix pass costs the same
+# for 2 rows as for 256, so at tiny batches the cheaper per-call gather wins
+# (measured on the BENCH_7 b32 pathology).  Both impls produce identical
+# uint32 partials, so the switch is invisible to conformance.
+_SMALL_BATCH_GATHER_ROWS = 64
+
 
 @register_backend
 class PallasBackend(TreeBackend):
@@ -55,6 +62,7 @@ class PallasBackend(TreeBackend):
                  impl: str = "auto", interpret: bool = True):
         super().__init__(packed, mode)
         scannable = getattr(packed, "internal_counts", None) is not None
+        was_auto = impl == "auto"
         if impl == "auto":
             # the linear scan needs the layout's internal prefix AND its
             # children-after-parents ordering (internal_counts is None when
@@ -69,6 +77,9 @@ class PallasBackend(TreeBackend):
                 + ("" if scannable else " without a scannable node order")
             )
         self.impl = impl
+        # only an *auto* resolution may fall back per batch — an explicitly
+        # pinned impl is a routing decision the caller owns
+        self._auto_small_batch = impl == "leaf_major" and was_auto
         self._kernel_kwargs = dict(
             block_b=block_b, block_t=block_t, impl=impl, interpret=interpret
         )
@@ -76,5 +87,8 @@ class PallasBackend(TreeBackend):
     def predict_partials(self, X):
         from repro.kernels.ops import packed_predict_integer
 
-        acc, _ = packed_predict_integer(self.packed, X, **self._kernel_kwargs)
+        kw = self._kernel_kwargs
+        if self._auto_small_batch and len(X) < _SMALL_BATCH_GATHER_ROWS:
+            kw = dict(kw, impl="gather")
+        acc, _ = packed_predict_integer(self.packed, X, **kw)
         return np.asarray(acc)

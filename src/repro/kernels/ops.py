@@ -25,6 +25,10 @@ from repro.kernels.tree_traverse import tree_traverse_leaf_major, tree_traverse_
 
 _VMEM_BUDGET_BYTES = 8 * 1024 * 1024  # stay well under ~16 MiB v5e VMEM
 
+# below this many rows a full-forest grid cell pays the whole per-cell scan
+# for a handful of rows; block_t is scaled down proportionally instead
+_TINY_BATCH_ROWS = 64
+
 
 def _block_words(block_b, block_t, n, f, c):
     """int32/uint32 words resident per grid cell: the x block, the four node
@@ -47,15 +51,48 @@ def pick_blocks(b, t, n, f, c, block_b=256):
     ``block_b * c`` output block and the ``n * c`` leaf rows dominate), the
     row block halves and the search repeats.  The floor is (1, 1): a single
     row against a single tree, the smallest working set any tiling can have.
+
+    Tiny batches (``b < 64``) additionally clamp ``block_t`` proportionally
+    to the rows that amortize it: a cell's tree scan costs the same whether
+    2 rows ride it or 256, so a full-forest tile against a handful of rows
+    is the pathological BENCH_7 ``b32`` case — all of the per-cell cost,
+    almost none of the row throughput.  VMEM fit is preserved (the clamp
+    only ever shrinks).
     """
     block_b = min(block_b, b)
     while True:
         for block_t in range(t, 0, -1):
             if _block_words(block_b, block_t, n, f, c) * 4 <= _VMEM_BUDGET_BYTES:
+                if b < _TINY_BATCH_ROWS:
+                    block_t = min(
+                        block_t, max(1, (t * b) // _TINY_BATCH_ROWS)
+                    )
                 return block_b, block_t
         if block_b == 1:
             return 1, 1  # model-fixed minimum; nothing left to shrink
         block_b //= 2
+
+
+def pick_blocks_candidates(b, t, n, f, c, block_b=256):
+    """The measured-autotune grid around the heuristic: the ``pick_blocks``
+    choice plus its VMEM-feasible half/double neighbours along each axis.
+
+    The heuristic optimizes a *budget*, not a runtime; ``TreeEngine.warm``'s
+    autotuner times these candidates on the live host and pins the winner.
+    Deduplicated, heuristic first (ties resolve to it), every entry fits the
+    VMEM budget, so any candidate is safe to pin.
+    """
+    auto_b, auto_t = pick_blocks(b, t, n, f, c, block_b)
+    cands = [(auto_b, auto_t)]
+    for bb, bt in (
+        (auto_b, max(1, auto_t // 2)),
+        (max(1, auto_b // 2), auto_t),
+        (auto_b, min(t, auto_t * 2)),
+    ):
+        if (bb, bt) not in cands and \
+                _block_words(bb, bt, n, f, c) * 4 <= _VMEM_BUDGET_BYTES:
+            cands.append((bb, bt))
+    return cands
 
 
 @partial(jax.jit, static_argnames=("depth", "block_b", "block_t", "impl", "interpret"))

@@ -181,7 +181,8 @@ def serve_gateway(args):
     bk = ({"block_rows": args.gw_block_rows}
           if args.gw_block_rows is not None else None)
     route = dict(backend=args.gw_backend, layout=args.gw_layout,
-                 backend_kwargs=bk, plan=args.gw_plan, shards=args.gw_shards)
+                 backend_kwargs=bk, plan=args.gw_plan, shards=args.gw_shards,
+                 autotune=args.gw_autotune)
 
     registry = ModelRegistry()
     t0 = time.time()
@@ -210,7 +211,8 @@ def serve_gateway(args):
         eng = registry.get(mid).engine(args.gw_mode, **route)
         eng.warm(args.gw_batch_rows)
     print(f"warmed shape buckets in {time.time()-t0:.1f}s "
-          f"(plan={eng.plan_name}, shards={eng.n_shards})")
+          f"(plan={eng.plan_name}, shards={eng.n_shards}, "
+          f"tuned={eng.tuned_config or '-'})")
 
     def _do_swap(gw):
         mv = gw.registry.register_forest(
@@ -337,6 +339,11 @@ def main(argv=None):
                     help="execution plan behind the gateway (default: "
                          "single-shard; 'auto' selects by capability from "
                          "--gw-shards and the mode)")
+    ap.add_argument("--gw-autotune", action="store_true",
+                    help="measure backend construction knobs (table-walk "
+                         "block_rows, bitvector interleave width, Pallas "
+                         "block tiling) during warm and serve on the winner; "
+                         "REPRO_AUTOTUNE=0 disables globally")
     ap.add_argument("--gw-shards", type=int, default=None,
                     help="shard count for tree-/row-parallel plans (trees "
                          "are carved via ForestIR.subset; partial integer "

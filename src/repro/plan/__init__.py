@@ -23,7 +23,11 @@ from repro.plan.base import (
 )
 from repro.plan.row_parallel import RowParallelPlan
 from repro.plan.single import SingleShardPlan
-from repro.plan.tree_parallel import TreeParallelPlan, tree_ranges
+from repro.plan.tree_parallel import (
+    TreeParallelPlan,
+    thread_shard_cap,
+    tree_ranges,
+)
 
 __all__ = [
     "ExecutionPlan",
@@ -36,5 +40,6 @@ __all__ = [
     "plan_class",
     "register_plan",
     "select_plan",
+    "thread_shard_cap",
     "tree_ranges",
 ]

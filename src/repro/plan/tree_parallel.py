@@ -28,6 +28,7 @@ the batch instead).
 """
 from __future__ import annotations
 
+import os
 import time
 from concurrent.futures import ThreadPoolExecutor
 from functools import reduce
@@ -39,6 +40,18 @@ import numpy as np
 from repro.plan.base import ExecutionPlan, as_ir, build_backend, register_plan
 
 _DEFAULT_SHARDS = 2
+
+
+def thread_shard_cap() -> int:
+    """The threaded path's shard ceiling: one in-flight shard per core, floor
+    2.  BENCH_7 measured the cost of ignoring this — s4/s8 ran 1.4–1.8x
+    *slower* than single-shard on the 1-core CI host, pure contention with no
+    parallelism to buy.  The floor keeps two shards even on one core: the
+    second shard overlaps the first's dispatch/merge gap (s2 measurably beat
+    single there), and it preserves real multi-shard coverage everywhere.
+    Fused (shard_map) plans are never capped — device counts are not core
+    counts."""
+    return max(os.cpu_count() or 1, 2)
 
 
 def tree_ranges(n_trees: int, shards: int) -> list:
@@ -55,7 +68,7 @@ class TreeParallelPlan(ExecutionPlan):
     def __init__(self, model, *, mode: str = "integer", backend="reference",
                  shards=None, layout: Optional[str] = None,
                  backend_kwargs: Optional[dict] = None,
-                 device_parallel="auto"):
+                 device_parallel="auto", clamp_shards: bool = True):
         ir = as_ir(model)
         super().__init__(ir, mode=mode)
         if not self._spec.deterministic:
@@ -84,6 +97,17 @@ class TreeParallelPlan(ExecutionPlan):
                     "plan (default layout, no backend kwargs) and at least "
                     f"{len(self.ranges)} jax devices"
                 )
+            # oversubscription cap (threaded path only): shards beyond the
+            # core budget cannot run concurrently, they just contend.  An
+            # explicit heterogeneous backend mix is an explicit fan-out
+            # request and is honored as asked; clamp_shards=False opts a
+            # homogeneous plan out (scaling benches measure the full sweep).
+            cap = thread_shard_cap()
+            if clamp_shards and isinstance(backend, str) \
+                    and len(self.ranges) > cap:
+                self.ranges = tree_ranges(ir.n_trees, cap)
+                names = names[: len(self.ranges)]
+                self._names = names
             self._shard_backends = tuple(
                 build_backend(name, ir.subset(a, b), mode, layout, backend_kwargs)
                 for name, (a, b) in zip(names, self.ranges)

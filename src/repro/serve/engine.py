@@ -100,15 +100,46 @@ class TreeEngine:
     once (tracked in ``compiled_buckets``).  ``max_bucket`` defaults to the
     plan's ``preferred_block_rows`` hint so padded shapes line up with the
     backends' internal tiling.
+
+    ``autotune=True`` measures the serving backend's construction knobs
+    (table-walk ``block_rows``, bitvector ``interleave``, Pallas block tiling
+    — see :mod:`repro.serve.autotune`) during :meth:`warm` and rebuilds the
+    plan on the measured winner; single-shard string-backend routes only, and
+    knobs the caller already pinned via ``backend_kwargs`` are never
+    overridden.  ``tuned_store`` (a mutable dict, normally the owning
+    ``ModelVersion``'s) caches winners per (backend, layout, mode) route so a
+    hot-swapped version or a rebuilt engine skips re-measuring; the
+    ``REPRO_AUTOTUNE=0`` env var disables tuning globally.
     """
 
     def __init__(self, packed=None, *, mode: str = "integer",
                  backend="reference", backend_kwargs: Optional[dict] = None,
                  max_bucket: Optional[int] = None, layout: Optional[str] = None,
                  plan: Optional[str] = None, shards: Optional[int] = None,
-                 plan_kwargs: Optional[dict] = None):
-        from repro.plan import create_plan
+                 plan_kwargs: Optional[dict] = None, autotune: bool = False,
+                 tuned_store: Optional[dict] = None):
+        from repro.plan import create_plan, select_plan
+        from repro.serve.autotune import TUNABLE_BACKENDS, autotune_enabled, \
+            config_str
 
+        self._ctor = dict(packed=packed, mode=mode, backend=backend,
+                          backend_kwargs=backend_kwargs, layout=layout,
+                          plan=plan, shards=shards, plan_kwargs=plan_kwargs)
+        self._tuned_store = tuned_store if tuned_store is not None else {}
+        self._tuned_config: Optional[str] = None
+        self._pending_tune = False
+        if autotune_enabled(autotune) and isinstance(backend, str) \
+                and backend in TUNABLE_BACKENDS \
+                and select_plan(plan, mode=mode, backend=backend,
+                                shards=shards, model=packed) == "single":
+            winner = self._tuned_store.get(self._tune_key())
+            if winner is not None:
+                # a cached measurement (hot-swap, rebuilt engine): apply it
+                # now — caller-pinned kwargs still win on key collisions
+                backend_kwargs = {**winner, **(backend_kwargs or {})}
+                self._tuned_config = config_str(winner)
+            else:
+                self._pending_tune = True
         self.plan = create_plan(
             plan, packed, mode=mode, backend=backend, shards=shards,
             layout=layout, backend_kwargs=backend_kwargs,
@@ -119,8 +150,13 @@ class TreeEngine:
         self.max_bucket = max_bucket or self.plan.preferred_block_rows or 4096
         self.compiled_buckets: set[int] = set()
         # first-execution wall ms per bucket (jit compile / native build /
-        # warm cost), drained by the gateway into per-model metrics
-        self._compile_ms: dict[int, float] = {}
+        # warm cost) plus the autotune measuring cost under the "tune" key,
+        # drained by the gateway into per-model metrics
+        self._compile_ms: dict = {}
+
+    def _tune_key(self):
+        c = self._ctor
+        return (c["backend"], c["layout"], c["mode"])
 
     @property
     def backend(self):
@@ -161,6 +197,48 @@ class TreeEngine:
         fn = getattr(self.backend, "simd_isa", None)
         return fn() if fn is not None else None
 
+    @property
+    def tuned_config(self) -> Optional[str]:
+        """The autotuned backend config serving this engine (e.g.
+        ``"interleave=4"``), or ``None`` when untuned (autotune off, tuning
+        still pending, or a knob the caller pinned)."""
+        return self._tuned_config
+
+    def _run_autotune(self, max_rows: int) -> None:
+        """Measure the backend's candidate grid and rebuild the plan on the
+        winner (see :mod:`repro.serve.autotune`).  Runs at most once, at the
+        start of the first :meth:`warm`; the measuring wall-ms lands in the
+        compile ledger under ``"tune"`` and the winner in ``tuned_store``."""
+        from repro.plan import create_plan
+        from repro.serve import autotune as at
+
+        self._pending_tune = False
+        c = self._ctor
+        user_kw = c["backend_kwargs"] or {}
+        backend = self.backend  # builds the default-config backend
+        grid = at.candidate_grid(self.backend_name, backend.packed)
+        if not grid or set(grid[0]) & set(user_kw):
+            return  # nothing to sweep, or the caller pinned the knob
+        t0 = time.perf_counter()
+        winner, winner_backend, _ = at.tune_backend(
+            self.backend_name, backend.packed, self.mode,
+            rows=min(max(max_rows, 1), at._TUNE_ROWS), baseline=backend,
+        )
+        self._compile_ms["tune"] = (time.perf_counter() - t0) * 1e3
+        if winner is None:
+            return
+        self._tuned_store[self._tune_key()] = winner
+        self._tuned_config = at.config_str(winner)
+        if winner_backend is not backend:
+            # serve on the measured winner: rebuild the plan around the
+            # already-built winning backend (no recompile)
+            self.plan = create_plan(
+                c["plan"], c["packed"], mode=c["mode"],
+                backend=winner_backend, shards=c["shards"],
+                layout=c["layout"], **(c["plan_kwargs"] or {})
+            )
+            self.compiled_buckets.clear()
+
     def drain_shard_timings(self) -> dict:
         """Per-shard wall time since the last drain (``{label: (ms, calls)}``)
         — what the gateway records into ``serve.metrics`` per batch."""
@@ -198,7 +276,13 @@ class TreeEngine:
         rows for row-parallel, full buckets per tree shard) — no shard is
         left to compile on the first live request.  For shape-oblivious plans
         one call builds every shard's artifact (e.g. compiles the native
-        libraries) and no further shapes exist."""
+        libraries) and no further shapes exist.
+
+        When autotuning is armed, the candidate sweep runs first — warm is
+        the one moment the engine may measure and swap its backend without a
+        request in flight — and the buckets below warm whatever won."""
+        if self._pending_tune:
+            self._run_autotune(max_rows)
         zeros = lambda nb: np.zeros((nb, self.packed.n_features), np.float32)
         if not self.plan.compiles_per_shape:
             self.predict(zeros(1))

@@ -53,6 +53,7 @@ class Gateway:
                  backend="reference", layout: str = None,
                  backend_kwargs: dict = None,
                  plan: str = None, shards: int = None,
+                 autotune: bool = False,
                  max_batch_rows: int = 256,
                  max_delay_ms: float = 2.0, max_queue_rows: int = 4096,
                  cache_rows: int = 65536, tracer=None):
@@ -76,6 +77,9 @@ class Gateway:
 
         self.plan = plan
         self.shards = shards
+        # arm warm-time measured autotuning on every engine this gateway
+        # builds (single-shard tunable routes; see repro.serve.autotune)
+        self.autotune = autotune
         resolved_plan = select_plan(plan, mode=mode, backend=backend,
                                     shards=shards)  # raises on unknown names
         if resolved_plan == "tree_parallel" and not mode_spec(mode).deterministic:
@@ -126,7 +130,8 @@ class Gateway:
     def _engine(self, mv):
         return mv.engine(self.mode, backend=self.backend, layout=self.layout,
                          backend_kwargs=self.backend_kwargs,
-                         plan=self.plan, shards=self.shards)
+                         plan=self.plan, shards=self.shards,
+                         autotune=self.autotune)
 
     def _execute(self, model_id: str, X: np.ndarray, rider_spans=()):
         """Batch executor handed to the MicroBatcher (runs in a thread).
@@ -158,8 +163,10 @@ class Gateway:
         mm.record_stages(eng.drain_stage_timings())
         mm.record_compiles(eng.drain_compile_timings())
         # dispatched SIMD ISA (free here: the batch above already built the
-        # backend, so the probe never triggers a compile)
+        # backend, so the probe never triggers a compile) + the autotuned
+        # config the engine is serving on, if any
         mm.record_isa(eng.simd_isa())
+        mm.record_tuned(eng.tuned_config)
         # meta = the version that actually computed, so cache fills are keyed
         # consistently even when a hot-swap lands between submit and dispatch
         return scores, preds, eng.padded_rows(len(X)), mv.version

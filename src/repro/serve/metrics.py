@@ -52,10 +52,13 @@ class ModelMetrics:
     # one-time compile/warm wall-ms per padded row bucket (max wins: a
     # bucket recompiles after a hot-swap, keep the worst cold-start)
     compile_ms: dict = field(default_factory=dict)
-    # SIMD ISA the serving backend dispatches to ("avx2"/"neon"/"scalar" for
-    # C backends; "-" before the first batch and for backends without the
-    # surface) — recorded by the gateway after each dispatch
+    # SIMD ISA the serving backend dispatches to ("avx2-k8"/"neon"/"scalar"
+    # for C backends; "-" before the first batch and for backends without
+    # the surface) — recorded by the gateway after each dispatch
     isa: str = "-"
+    # the warm-time autotuner's chosen backend config (e.g. "interleave=4");
+    # "-" when the route is untuned or tuning hasn't run yet
+    tuned: str = "-"
     t_first: float = 0.0
     t_last: float = 0.0
 
@@ -123,6 +126,11 @@ class ModelMetrics:
         if isa:
             self.isa = str(isa)
 
+    def record_tuned(self, config) -> None:
+        """Record the engine's autotuned config string (None keeps "-")."""
+        if config:
+            self.tuned = str(config)
+
     def _stage_mean(self, stage: str) -> float:
         h = self.stages.get(stage)
         return h.mean if h is not None and h.count else float("nan")
@@ -154,12 +162,17 @@ class ModelMetrics:
             "cache_hit_rate": self.cache_hits / probed if probed else 0.0,
             "cache_hits": self.cache_hits,
             "isa": self.isa,
+            "tuned": self.tuned,
             # the per-stage attribution columns: mean wall ms per stage
             # sample — where a request's latency actually went
             **{f"{stage}_ms": self._stage_mean(stage) for stage in _STAGE_COLUMNS},
             "latency": self.latency.snapshot(),
             "stages": {name: h.snapshot() for name, h in sorted(self.stages.items())},
-            "compile_ms_by_bucket": dict(sorted(self.compile_ms.items())),
+            # keys are int row buckets plus the autotuner's "tune" entry —
+            # sort on the string form so the mix stays orderable
+            "compile_ms_by_bucket": dict(
+                sorted(self.compile_ms.items(), key=lambda kv: str(kv[0]))
+            ),
             # per-shard execution time of the serving plan: mean ms per call
             # exposes shard imbalance, total ms the parallel overlap
             "shards": {
@@ -183,7 +196,7 @@ _TABLE_COLS = (
     ("queue_ms", "queue_ms"), ("pad_ms", "pad_ms"), ("shard_ms", "shard_ms"),
     ("final_ms", "finalize_ms"), ("occup", "batch_occupancy"),
     ("pad_eff", "pad_efficiency"), ("hit_rate", "cache_hit_rate"),
-    ("isa", "isa"), ("shards", "shards"),
+    ("isa", "isa"), ("tuned", "tuned"), ("shards", "shards"),
 )
 
 

@@ -36,11 +36,16 @@ class ModelVersion:
     # wall-ms spent constructing each route's engine (backend builds, native
     # compiles) — the cold-start cost ``describe()`` surfaces per model
     _build_ms: dict = field(default_factory=dict, repr=False)
+    # measured autotune winners per (backend, layout, mode) route — written
+    # by TreeEngine warm-time tuning, copied forward across hot-swaps by the
+    # registry so a swapped-in version reuses the measurement
+    _tuned: dict = field(default_factory=dict, repr=False)
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
 
     def engine(self, mode: str = "integer", *, backend="reference",
                layout: str = None, backend_kwargs: dict = None,
-               plan: str = None, shards: int = None) -> TreeEngine:
+               plan: str = None, shards: int = None,
+               autotune: bool = False) -> TreeEngine:
         """The memoized TreeEngine for one (mode, backend, layout, plan,
         shards) route.
 
@@ -51,6 +56,9 @@ class ModelVersion:
         ``shards`` select the execution plan (single-shard by default).
         ``backend_kwargs`` only apply on the call that first builds the
         engine; later lookups for the same route return it as-is.
+        ``autotune`` arms warm-time measured tuning (memoized separately, so
+        tuned and untuned routes never alias); winners land in this
+        version's ``_tuned`` cache and survive hot-swaps.
         """
         from repro.backends import backend_class
         from repro.plan import select_plan
@@ -67,13 +75,14 @@ class ModelVersion:
         resolved_plan = select_plan(plan, mode=mode, backend=backend,
                                     shards=shards, model=self.packed)
         key = (mode, backend_key, resolved, resolved_plan,
-               None if resolved_plan == "single" else shards)
+               None if resolved_plan == "single" else shards, bool(autotune))
         with self._lock:
             if key not in self._engines:
                 t0 = time.perf_counter()
                 self._engines[key] = TreeEngine(
                     self.packed, mode=mode, backend=backend, layout=resolved,
                     backend_kwargs=backend_kwargs, plan=plan, shards=shards,
+                    autotune=autotune, tuned_store=self._tuned,
                 )
                 route = "/".join(
                     str(p) for p in (mode, backend_key, resolved, resolved_plan)
@@ -94,6 +103,12 @@ class ModelRegistry:
             version = self._history.get(model_id, 0) + 1
             mv = ModelVersion(model_id=model_id, version=version, packed=packed,
                               source=source)
+            prev = self._models.get(model_id)
+            if prev is not None:
+                # carry measured autotune winners across the hot-swap: the
+                # host didn't change, so the new version serves on the tuned
+                # config immediately instead of re-measuring during warm
+                mv._tuned.update(prev._tuned)
             self._history[model_id] = version
             self._models[model_id] = mv  # atomic repoint = hot-swap
             return mv

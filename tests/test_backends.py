@@ -386,6 +386,45 @@ def test_table_walk_block_rows_degenerate(degenerate_case, block_rows):
                                   err_msg=f"table/{block_rows}")
 
 
+@pytest.mark.requires_gcc
+@pytest.mark.parametrize("interleave", [1, 4, 8])
+@pytest.mark.parametrize("mode", ["flint", "integer"])
+def test_bitvector_interleave_widths_randomized(random_case, interleave, mode):
+    """v-QuickScorer interleaved comparison groups: every width is
+    bit-identical to the reference walk — the stream pads with inert entries
+    (a key that never tests true, an all-ones mask) and grouping never
+    reorders a real mask application."""
+    packed, rows = random_case
+    s_ref, p_ref = _scores(create_backend("reference", packed, mode=mode), rows)
+    eng = TreeEngine(packed.to_ir(), mode=mode, backend="native_c_bitvector",
+                     backend_kwargs={"interleave": interleave})
+    assert eng.backend.interleave == interleave
+    s, p = eng.predict_scores(rows)
+    np.testing.assert_array_equal(np.asarray(s), s_ref,
+                                  err_msg=f"bitvector/k{interleave}/{mode}")
+    np.testing.assert_array_equal(np.asarray(p), p_ref,
+                                  err_msg=f"bitvector/k{interleave}/{mode}")
+
+
+@pytest.mark.requires_gcc
+@pytest.mark.parametrize("interleave", [1, 4, 8])
+def test_bitvector_interleave_widths_degenerate(degenerate_case, interleave):
+    """Degenerate forests through the interleaved scorer: stumps contribute
+    no comparisons at all (pure padding groups), single-tree forests leave
+    most of a K-group inert."""
+    ir, rows = degenerate_case
+    s_ref, p_ref = _scores(
+        create_backend("reference", ir.materialize("padded"), mode="integer"), rows
+    )
+    eng = TreeEngine(ir, mode="integer", backend="native_c_bitvector",
+                     backend_kwargs={"interleave": interleave})
+    s, p = eng.predict_scores(rows)
+    np.testing.assert_array_equal(np.asarray(s), s_ref,
+                                  err_msg=f"bitvector/k{interleave}")
+    np.testing.assert_array_equal(np.asarray(p), p_ref,
+                                  err_msg=f"bitvector/k{interleave}")
+
+
 def test_degenerate_ragged_has_no_padding_waste(degenerate_case):
     ir, _ = degenerate_case
     sizes = ir.nbytes_by_layout(mode="integer")

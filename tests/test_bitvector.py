@@ -175,8 +175,10 @@ def test_degraded_builds_stay_bit_identical(monkeypatch, flags, forces_scalar):
 
 @pytest.mark.requires_gcc
 def test_simd_isa_surface(small_packed):
-    """simd_isa() reports the dispatched ISA: a real one for the blocked
-    table walk, scalar for dispatcher-less TUs and pinned-scalar builds."""
+    """simd_isa() reports the *dispatched* variant, not compile-time
+    capability: a plain ISA for the blocked table walk, an ISA + interleave
+    width (e.g. "avx512-k8", "avx2-k4", "neon-k8") for the bitvector unit,
+    scalar for dispatcher-less TUs and pinned-scalar builds."""
     ir = small_packed.to_ir()
     ragged = ir.materialize("ragged")
     blocked = create_backend("native_c_table", ragged, mode="integer")
@@ -187,9 +189,45 @@ def test_simd_isa_surface(small_packed):
     # TUs without a runtime dispatcher are scalar by construction
     assert create_backend("native_c", small_packed,
                           mode="integer").simd_isa() == "scalar"
-    # the bitvector unit dispatches AVX2 or scalar only (no NEON block)
-    assert create_backend("native_c_bitvector", ir.materialize("bitvector"),
-                          mode="integer").simd_isa() in ("avx2", "scalar")
+    # the bitvector unit names the variant it dispatches: ISA prefix plus
+    # the emitted interleave width
+    bv = ir.materialize("bitvector")
+    isa = create_backend("native_c_bitvector", bv, mode="integer").simd_isa()
+    assert isa == "scalar" or \
+        isa in tuple(f"{p}-k8" for p in ("avx512", "avx2", "neon"))
+    isa4 = create_backend("native_c_bitvector", bv, mode="integer",
+                          interleave=4).simd_isa()
+    assert isa4 == "scalar" or isa4.endswith("-k4")
+    # simd=False pins the scalar blocked path for this build only
+    assert create_backend("native_c_bitvector", bv, mode="integer",
+                          simd=False).simd_isa() == "scalar"
+
+
+@pytest.mark.requires_gcc
+@pytest.mark.parametrize("simd", [True, False], ids=["simd", "scalar"])
+@pytest.mark.parametrize("interleave", [1, 4, 8])
+def test_interleave_widths_every_dispatch_bit_identical(interleave, simd):
+    """K-wide comparison groups x {host SIMD dispatch, pinned scalar}: the
+    grouping transform is pure padding + unrolling, so every (width,
+    dispatch) pair matches the reference bits — including the multi-word
+    (>64-leaf) case, where the K applies each touch several mask words."""
+    rng = np.random.default_rng(interleave * 10 + simd)
+    for name, ir in (("random2", ForestIR.from_forest(_random_forest(2))),
+                     ("multiword", ForestIR.from_forest(_multiword_forest()))):
+        rows = rng.normal(0, 4, (23, ir.n_features)).astype(np.float32)
+        want = np.asarray(
+            create_backend("reference", ir.materialize("padded"),
+                           mode="integer").predict_partials(rows))
+        b = create_backend("native_c_bitvector", ir.materialize("bitvector"),
+                           mode="integer", interleave=interleave, simd=simd)
+        np.testing.assert_array_equal(
+            np.asarray(b.predict_partials(rows)), want,
+            err_msg=f"{name} k={interleave} simd={simd}")
+        isa = b.simd_isa()
+        if simd:
+            assert isa == "scalar" or isa.endswith(f"-k{interleave}")
+        else:
+            assert isa == "scalar"
 
 
 @pytest.mark.requires_gcc

@@ -274,9 +274,12 @@ def test_gateway_trace_tree_parallel(small_forest, shuttle_small):
     merge span, all inside the batch span."""
     _, _, Xte, _ = shuttle_small
     tracer = Tracer()
+    from repro.plan import thread_shard_cap
+
     gw, _ = _run_traced_gateway(small_forest, Xte, tracer=tracer,
                                 plan="tree_parallel", shards=3)
-    trees = _assert_trace_integrity(tracer.spans(), expect_shards=3)
+    n = min(3, thread_shard_cap())  # threaded fan-out is core-capped
+    trees = _assert_trace_integrity(tracer.spans(), expect_shards=n)
     flat = []
 
     def walk(n):
@@ -289,7 +292,7 @@ def test_gateway_trace_tree_parallel(small_forest, shuttle_small):
     assert any(n == "merge" for n in flat)
     st = gw.stats()["per_model"]["m"]
     assert st["stages"]["merge"]["count"] > 0
-    assert len(st["shards"]) == 3
+    assert len(st["shards"]) == n
 
 
 def test_gateway_trace_row_parallel(small_forest, shuttle_small):

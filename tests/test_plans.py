@@ -32,6 +32,7 @@ from repro.plan import (
     create_plan,
     plan_class,
     select_plan,
+    thread_shard_cap,
     tree_ranges,
 )
 from repro.serve.engine import TreeEngine
@@ -130,6 +131,41 @@ def test_tree_ranges_contiguous_and_capped():
     assert all(a2 == b1 for (_, b1), (a2, _) in zip(spans[:-1], spans[1:]))
 
 
+def test_threaded_shards_clamped_to_core_budget(small_packed, probe_rows,
+                                                reference_scores, monkeypatch):
+    """BENCH_7 regression: oversubscribed threaded fan-out (s4/s8 on a 1-core
+    host ran 1.4-1.8x slower than single-shard) is clamped to the core budget
+    — and clamping never perturbs the merged partials."""
+    monkeypatch.setattr("os.cpu_count", lambda: 2)
+    assert thread_shard_cap() == 2
+    ir = small_packed.to_ir()
+    thr = {"device_parallel": False}
+    eng = TreeEngine(ir, mode="integer", plan="tree_parallel", shards=8,
+                     plan_kwargs=thr)
+    assert not eng.plan.fused and eng.n_shards == 2
+    s, p = _scores(eng, probe_rows)
+    np.testing.assert_array_equal(s, reference_scores["integer"][0])
+    np.testing.assert_array_equal(p, reference_scores["integer"][1])
+    # the floor keeps two shards even on a single core (s2 beat single there)
+    monkeypatch.setattr("os.cpu_count", lambda: 1)
+    assert thread_shard_cap() == 2
+    # clamp_shards=False opts out — scaling benches measure the full sweep
+    eng = TreeEngine(ir, mode="integer", plan="tree_parallel", shards=8,
+                     plan_kwargs={**thr, "clamp_shards": False})
+    assert eng.n_shards == min(8, ir.n_trees)
+    # an explicit heterogeneous mix is an explicit fan-out request: honored
+    eng = TreeEngine(ir, mode="integer",
+                     backend=("reference", "reference", "reference",
+                              "reference"), plan_kwargs=thr)
+    assert eng.n_shards == min(4, ir.n_trees)
+    import jax
+
+    if len(jax.devices()) >= 8:  # the forced-device conformance config
+        # the fused shard_map path is never capped: devices are not cores
+        eng = TreeEngine(ir, mode="integer", plan="tree_parallel", shards=8)
+        assert eng.plan.fused and eng.n_shards == min(8, ir.n_trees)
+
+
 # ----------------------------------------------------- the acceptance matrix
 
 @pytest.mark.parametrize("plan,shards", PLAN_SPECS,
@@ -151,7 +187,12 @@ def test_plan_bit_identity_randomized(small_packed, probe_rows,
             p, p_ref, err_msg=f"{plan}({shards})/{backend}/{layout}/{mode}")
         assert eng.plan_name == plan
         if plan == "tree_parallel":
-            assert eng.n_shards == min(shards, ir.n_trees)
+            # the fused device path keeps the requested carve; the threaded
+            # path additionally caps fan-out at the host's core budget
+            want = min(shards, ir.n_trees)
+            if not eng.plan.fused:
+                want = min(want, thread_shard_cap())
+            assert eng.n_shards == want
 
 
 @pytest.mark.parametrize("plan,shards",
@@ -354,7 +395,7 @@ def test_plan_shard_timings_drain(small_packed, shuttle_small):
                      shards=3, plan_kwargs={"device_parallel": False})
     eng.predict_scores(Xte[:8])
     t = eng.drain_shard_timings()
-    assert len(t) == 3
+    assert len(t) == min(3, thread_shard_cap())  # threaded -> core-capped
     for label, (ms, calls) in t.items():
         assert label.startswith("s") and ms >= 0 and calls == 1
     assert eng.drain_shard_timings() == {}  # drained
