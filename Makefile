@@ -4,7 +4,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test test-fast conformance check bench bench-smoke ci obs \
-	obs-artifacts serve-trees serve-gateway
+	obs-artifacts worker-fleet serve-trees serve-gateway
 
 # tier-1 verify (see ROADMAP.md)
 test:
@@ -53,12 +53,21 @@ bench:
 # artifact CI uploads
 bench-smoke:
 	REPRO_BENCH_TINY=1 REPRO_BENCH_DEVICES=8 \
-		REPRO_BENCH_SNAPSHOT=BENCH_8.json \
+		REPRO_BENCH_SNAPSHOT=BENCH_9.json \
 		$(PY) benchmarks/run.py backend_matrix backend_bitvector \
-		memory_footprint plan_scaling
+		memory_footprint plan_scaling remote_scaleout
+
+# the remote-worker fabric suite: spawns loopback worker processes, runs
+# the cross-process conformance + kill/re-dispatch tests, and (via
+# REPRO_WORKER_SPAN_DIR) collects worker-side span JSONL under
+# benchmarks/artifacts/ for the CI artifact upload
+worker-fleet:
+	mkdir -p benchmarks/artifacts
+	REPRO_WORKER_SPAN_DIR=benchmarks/artifacts \
+		$(PY) -m pytest -q tests/test_remote.py tests/test_spec.py
 
 # exactly what .github/workflows/ci.yml runs, as one local target
-ci: test-fast conformance bench-smoke
+ci: test-fast conformance bench-smoke worker-fleet
 
 serve-trees:
 	$(PY) -m repro.launch.serve --trees

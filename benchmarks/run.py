@@ -789,6 +789,91 @@ def plan_scaling():
             )
 
 
+def remote_scaleout():
+    """Scale-out axis: rows/s vs loopback worker *process* count.
+
+    The remote_tree_parallel plan ships tree shards to worker processes over
+    the ITRG wire protocol and merges their uint32 partials at the gateway —
+    the paper's associative integer sum across machine boundaries.  Before
+    timing, every worker count's merged output is asserted bit-identical to
+    the single-process walk; a final pass re-asserts it for flint AND
+    integer *after a forced worker kill mid-request* (straggler re-dispatch
+    to the survivor).
+    """
+    import threading
+
+    from repro.serve.engine import TreeEngine
+    from repro.serve.worker import spawn_local_workers
+
+    data = _datasets()["shuttle"]
+    rf, packed, Xte, _ = _forest(data, 24 if TINY else 96,
+                                 depth=4 if TINY else 6)
+    batch = 256 if TINY else 2048
+    X = Xte[:batch]
+    batch = len(X)
+
+    single = TreeEngine(packed, "integer")
+    single.warm(batch)
+    s_ref, p_ref = single.predict_scores(X)
+    t_single = _time(single.predict_scores, X, reps=3)
+    emit(
+        f"remote_single_b{batch}", t_single,
+        f"ns_per_row={t_single * 1e3 / batch:.1f};workers=0",
+    )
+
+    for n in (1, 2, 4):
+        eng = TreeEngine(
+            packed, f"integer:reference+remote_tree_parallel:{n}",
+            plan_kwargs={"workers": n, "model_id": "bench", "version": 1},
+        )
+        eng.warm(batch)
+        s, p = eng.predict_scores(X)
+        assert (np.asarray(s) == np.asarray(s_ref)).all() \
+            and (np.asarray(p) == np.asarray(p_ref)).all(), \
+            f"remote({n} workers) diverged from single-process"
+        us = _time(eng.predict_scores, X, reps=3)
+        eng.close()
+        emit(
+            f"remote_scaleout_w{n}_b{batch}", us,
+            f"ns_per_row={us * 1e3 / batch:.1f};"
+            f"rows_per_s={batch / (us / 1e6):.0f};workers={n};"
+            f"speedup_vs_single={t_single / us:.2f}x",
+        )
+
+    # conformance under failure: one worker stalls and is killed mid-request;
+    # its shard re-dispatches to the survivor, output must not change by a bit
+    Xk = X[:min(128, batch)]
+    for mode in ("flint", "integer"):
+        ref = TreeEngine(packed, mode).predict_scores(Xk)
+        procs, addrs = spawn_local_workers(2, delays=[2000, 0])
+        try:
+            eng = TreeEngine(
+                packed, f"{mode}:reference+remote_tree_parallel:2",
+                plan_kwargs={"workers": addrs, "model_id": "bench",
+                             "version": 1},
+            )
+            killer = threading.Timer(0.3, procs[0].kill)
+            killer.start()
+            try:
+                s, p = eng.predict_scores(Xk)
+            finally:
+                killer.cancel()
+            identical = bool((np.asarray(s) == np.asarray(ref[0])).all()
+                             and (np.asarray(p) == np.asarray(ref[1])).all())
+            assert identical, f"{mode}: kill/re-dispatch changed the output"
+            emit(
+                f"remote_kill_redispatch_{mode}", 0.0,
+                f"identical={identical};redispatches={eng.plan.redispatches}",
+            )
+            eng.close()
+        finally:
+            for p_ in procs:
+                if p_.poll() is None:
+                    p_.kill()
+                if p_.stdout is not None:
+                    p_.stdout.close()
+
+
 def roofline_table():
     """§Roofline: summarize every dry-run artifact (see EXPERIMENTS.md)."""
     dd = ART / "dryrun"
@@ -821,6 +906,7 @@ BENCHES = (
     backend_matrix,
     backend_bitvector,
     plan_scaling,
+    remote_scaleout,
     gateway_vs_naive,
     gateway_stage_breakdown,
     roofline_table,

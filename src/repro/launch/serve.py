@@ -28,8 +28,18 @@ Three modes, matching the paper's end-to-end story adapted to a serving stack:
     (plus a ``.json`` sibling with the full stats dict).
   * LM mode: load a smoke config and run batched prefill+decode generation.
 
+The gateway route is one ``--gw-spec`` EngineSpec string (the per-field
+``--gw-*`` flags stay as overrides), and ``--workers`` serves tree shards on
+worker *processes* over the ITRG wire protocol — spawn N on loopback or
+connect to a fleet started with ``--worker-listen HOST:PORT`` (or
+``python -m repro.serve.worker``).
+
   PYTHONPATH=src python -m repro.launch.serve --trees --rows 20000
   PYTHONPATH=src python -m repro.launch.serve --trees --gateway --gw-requests 400
+  PYTHONPATH=src python -m repro.launch.serve --trees --gateway \
+      --gw-spec 'integer:bitvector@leaf_major+tree_parallel:4'
+  PYTHONPATH=src python -m repro.launch.serve --trees --gateway --workers 2
+  PYTHONPATH=src python -m repro.launch.serve --worker-listen 0.0.0.0:7071
   PYTHONPATH=src python -m repro.launch.serve --trees --gateway \
       --gw-trace-out trace.jsonl --gw-metrics-out metrics.prom
   PYTHONPATH=src python -m repro.launch.serve --arch granite-3-2b --smoke
@@ -62,17 +72,16 @@ def serve_trees(args):
         f"integer artifact {packed.nbytes_integer()/1e3:.1f} kB "
         f"(float: {packed.nbytes_float()/1e3:.1f} kB)"
     )
-    engines = {m: TreeEngine(packed, mode=m) for m in ("float", "flint", "integer")}
-    engines["integer-leafmajor"] = TreeEngine(packed, mode="integer",
-                                              layout="leaf_major")
-    engines["integer-pallas"] = TreeEngine(packed, mode="integer", backend="pallas")
+    engines = {m: TreeEngine(packed, m) for m in ("float", "flint", "integer")}
+    engines["integer-leafmajor"] = TreeEngine(packed,
+                                              "integer:reference@leaf_major")
+    engines["integer-pallas"] = TreeEngine(packed, "integer:pallas")
     if have_c_toolchain():
-        engines["integer-native-c"] = TreeEngine(packed, mode="integer",
-                                                 backend="native_c")
+        engines["integer-native-c"] = TreeEngine(packed, "integer:native_c")
         # the table-walk C backend resolves the ragged ForestIR layout
         # through packed.ir — same model, fourth execution strategy
-        engines["integer-c-table"] = TreeEngine(packed, mode="integer",
-                                                backend="native_c_table")
+        engines["integer-c-table"] = TreeEngine(packed,
+                                                "integer:native_c_table")
     else:
         print("gcc not found: skipping the native_c / native_c_table rows")
     ref = None
@@ -165,6 +174,54 @@ async def run_gateway_workload(gateway, pools, *, n_requests: int, rate_hz: floa
     return results, rejected
 
 
+def resolve_gateway_spec(args):
+    """One EngineSpec from ``--gw-spec`` plus the legacy per-field flags.
+
+    ``--gw-spec`` is the canonical form; any legacy flag given explicitly
+    overrides the corresponding spec field (the flags default to None so
+    "not given" is distinguishable).  ``--workers`` selects the remote plan
+    (when no plan was named) and becomes the plan's deployment kwargs:
+    an integer spawns that many loopback worker processes, a comma list
+    connects to an already-running fleet.
+    Returns ``(spec, plan_kwargs)``.
+    """
+    from repro.serve.spec import EngineSpec
+
+    spec = EngineSpec.parse(args.gw_spec) if args.gw_spec else EngineSpec()
+    over = {}
+    if args.gw_mode is not None:
+        over["mode"] = args.gw_mode
+    if args.gw_backend is not None:
+        over["backend"] = args.gw_backend
+    if args.gw_layout is not None:
+        over["layout"] = args.gw_layout
+    if args.gw_plan is not None:
+        over["plan"] = None if args.gw_plan == "auto" else args.gw_plan
+    if args.gw_shards is not None:
+        over["shards"] = args.gw_shards
+    if args.gw_autotune:
+        over["autotune"] = True
+    if args.gw_block_rows is not None:
+        backend = over.get("backend", spec.backend)
+        if backend != "native_c_table":
+            raise SystemExit(
+                "--gw-block-rows is the table-walk C row-block knob; it "
+                f"needs the native_c_table backend (got {backend!r})"
+            )
+        over["backend_kwargs"] = dict(spec.backend_kwargs or {},
+                                      block_rows=args.gw_block_rows)
+    plan_kwargs = None
+    if getattr(args, "workers", None):
+        w = args.workers
+        workers = int(w) if w.isdigit() else [a.strip() for a in w.split(",")]
+        plan_kwargs = {"workers": workers}
+        if spec.plan is None and "plan" not in over:
+            over["plan"] = "remote_tree_parallel"
+        if (over.get("shards") or spec.shards) is None:
+            over["shards"] = workers if isinstance(workers, int) else len(workers)
+    return (spec.replace(**over) if over else spec), plan_kwargs
+
+
 def serve_gateway(args):
     import asyncio
 
@@ -172,17 +229,9 @@ def serve_gateway(args):
     from repro.serve.registry import ModelRegistry
     from repro.trees.forest import RandomForestClassifier
 
-    if args.gw_block_rows is not None and args.gw_backend != "native_c_table":
-        raise SystemExit(
-            "--gw-block-rows is the table-walk C row-block knob; it needs "
-            "--gw-backend native_c_table (got "
-            f"{args.gw_backend!r})"
-        )
-    bk = ({"block_rows": args.gw_block_rows}
-          if args.gw_block_rows is not None else None)
-    route = dict(backend=args.gw_backend, layout=args.gw_layout,
-                 backend_kwargs=bk, plan=args.gw_plan, shards=args.gw_shards,
-                 autotune=args.gw_autotune)
+    spec, plan_kwargs = resolve_gateway_spec(args)
+    print(f"gateway route: {spec}"
+          + (f"  plan_kwargs={plan_kwargs}" if plan_kwargs else ""))
 
     registry = ModelRegistry()
     t0 = time.time()
@@ -195,12 +244,12 @@ def serve_gateway(args):
         tracer = Tracer(sample=args.gw_trace_sample)
     gateway = Gateway(
         registry,
-        mode=args.gw_mode,
+        spec,
+        plan_kwargs=plan_kwargs,
         max_batch_rows=args.gw_batch_rows,
         max_delay_ms=args.gw_max_delay_ms,
         max_queue_rows=args.gw_queue_rows,
         tracer=tracer,
-        **route,
     )
 
     # warm every (model, bucket) pair — through the plan, so every shard of a
@@ -208,7 +257,7 @@ def serve_gateway(args):
     # latency stats
     t0 = time.time()
     for mid in registry.ids():
-        eng = registry.get(mid).engine(args.gw_mode, **route)
+        eng = registry.get(mid).engine(spec, plan_kwargs=plan_kwargs)
         eng.warm(args.gw_batch_rows)
     print(f"warmed shape buckets in {time.time()-t0:.1f}s "
           f"(plan={eng.plan_name}, shards={eng.n_shards}, "
@@ -220,7 +269,7 @@ def serve_gateway(args):
             RandomForestClassifier(n_estimators=28, max_depth=6, seed=9).fit(Xtr, ytr),
         )
         # warm the new version too (every shard of its plan)
-        mv.engine(args.gw_mode, **route).warm(args.gw_batch_rows)
+        mv.engine(spec, plan_kwargs=plan_kwargs).warm(args.gw_batch_rows)
         print(f"  hot-swapped shuttle-rf -> v{mv.version} under live traffic")
 
     swap_done = []
@@ -272,7 +321,7 @@ def serve_gateway(args):
             X = pools[mid][:48]
             g_scores, g_preds = await gateway.submit(mid, X)
             d_scores, d_preds = registry.get(mid).engine(
-                args.gw_mode, **route
+                spec, plan_kwargs=plan_kwargs
             ).predict_scores(X)
             ok &= bool((g_scores == d_scores).all() and (g_preds == d_preds).all())
         print(f"gateway == direct engine (bit-identical): {ok}")
@@ -316,12 +365,19 @@ def main(argv=None):
     ap.add_argument("--gw-batch-rows", type=int, default=64)
     ap.add_argument("--gw-max-delay-ms", type=float, default=5.0)
     ap.add_argument("--gw-queue-rows", type=int, default=2048)
-    ap.add_argument("--gw-mode", default="integer", choices=("float", "flint", "integer"))
+    ap.add_argument("--gw-spec", default=None, metavar="SPEC",
+                    help="the serving route as one EngineSpec string, e.g. "
+                         "'integer:bitvector@leaf_major+tree_parallel:4' or "
+                         "'flint:reference+remote_tree_parallel:2'; the "
+                         "--gw-mode/--gw-backend/--gw-layout/--gw-plan/"
+                         "--gw-shards flags remain as per-field overrides")
+    ap.add_argument("--gw-mode", default=None, choices=("float", "flint", "integer"))
     from repro.backends import available_backends
 
-    ap.add_argument("--gw-backend", default="reference",
+    ap.add_argument("--gw-backend", default=None,
                     choices=tuple(available_backends()),
-                    help="execution backend behind the gateway")
+                    help="execution backend behind the gateway "
+                         "(default: reference)")
     from repro.ir import available_layouts
 
     ap.add_argument("--gw-layout", default=None,
@@ -348,6 +404,19 @@ def main(argv=None):
                     help="shard count for tree-/row-parallel plans (trees "
                          "are carved via ForestIR.subset; partial integer "
                          "scores merge bit-exactly)")
+    ap.add_argument("--workers", default=None, metavar="N|HOST:PORT,...",
+                    help="serve tree shards on worker processes: an integer "
+                         "spawns that many loopback workers, a comma list "
+                         "connects to already-running ones (see "
+                         "--worker-listen); implies the remote_tree_parallel "
+                         "plan unless --gw-plan/--gw-spec name another")
+    ap.add_argument("--worker-listen", default=None, metavar="HOST:PORT",
+                    help="run as a shard worker instead of a gateway: bind "
+                         "here, print WORKER_READY, and serve uint32 "
+                         "partials over the ITRG wire protocol (equivalent "
+                         "to python -m repro.serve.worker)")
+    ap.add_argument("--worker-span-out", default=None, metavar="PATH",
+                    help="worker mode: append per-request span JSONL here")
     ap.add_argument("--gw-trace", action="store_true",
                     help="sample per-request span trees and print a "
                          "flame-style stage summary after the workload")
@@ -366,6 +435,13 @@ def main(argv=None):
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
     args = ap.parse_args(argv)
+    if args.worker_listen:
+        from repro.serve import worker
+
+        wargv = ["--listen", args.worker_listen]
+        if args.worker_span_out:
+            wargv += ["--span-out", args.worker_span_out]
+        return worker.main(wargv)
     if args.trees and args.gateway:
         serve_gateway(args)
     elif args.trees:

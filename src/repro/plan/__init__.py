@@ -21,6 +21,7 @@ from repro.plan.base import (
     register_plan,
     select_plan,
 )
+from repro.plan.remote import RemoteTreeParallelPlan
 from repro.plan.row_parallel import RowParallelPlan
 from repro.plan.single import SingleShardPlan
 from repro.plan.tree_parallel import (
@@ -31,6 +32,7 @@ from repro.plan.tree_parallel import (
 
 __all__ = [
     "ExecutionPlan",
+    "RemoteTreeParallelPlan",
     "RowParallelPlan",
     "SingleShardPlan",
     "TreeParallelPlan",

@@ -14,19 +14,33 @@ merged sum is *bit-identical* to the single-shard walk.  Finalize
 (reciprocal-multiply averaging + argmax, ``repro.core.ensemble.
 finalize_partials``) runs exactly once, on the merged accumulator.
 
-Three registered plans:
+Four registered plans:
   * ``single``        — today's path: one backend, the whole forest.
   * ``tree_parallel`` — shard trees across jax devices (``shard_map`` over a
                         stacked sub-forest table) or across per-shard
                         backends, possibly heterogeneous; integer merge.
   * ``row_parallel``  — shard the batch; rows are independent, so this is
                         bit-exact for *every* mode, float included.
+  * ``remote_tree_parallel`` — tree shards on worker *processes* (loopback
+                        or other hosts) over the wire protocol in
+                        ``repro.serve.wire``; uint32 partials merge at the
+                        gateway, stragglers/deaths re-dispatch.
 
 *Adding a plan*: subclass :class:`ExecutionPlan`, set ``name``, implement
 ``predict_partials`` (and ``predict_scores`` if the plan serves
 non-deterministic modes), decorate with ``@register_plan``; the serving stack
-picks it up by name (``TreeEngine(..., plan="...", shards=N)``,
-``Gateway(..., plan=...)``, ``--gw-plan``/``--gw-shards``).
+picks it up by name (``TreeEngine(spec="integer:reference+myplan:4")``,
+``Gateway(registry, spec)``, ``--gw-spec``).  Plans that can only serve
+exact-integer partial modes set ``deterministic_only = True`` so the
+gateway rejects the route up front.  Plans that own executors beyond the
+calling thread — thread pools, worker processes, sockets — override
+``close()`` (drain in-flight work, then release); one-time setup cost
+(connect/handshake) goes in the dict ``drain_setup_timings()`` returns
+(e.g. ``{"remote": ms}``), which the engine folds into its compile/warm
+ledger.  Remote plans additionally need a worker-side contract: ship the
+model + shard table in one handshake so *any* worker can serve *any*
+shard, which is what makes re-dispatching a dead worker's shard trivial
+(see ``repro.plan.remote``).
 """
 from __future__ import annotations
 
@@ -96,6 +110,9 @@ class ExecutionPlan(abc.ABC):
     """
 
     name: ClassVar[str]
+    #: True for plans that only serve exact-integer partial modes (the
+    #: gateway validates the route against this before building engines)
+    deterministic_only: ClassVar[bool] = False
 
     def __init__(self, model, *, mode: str = "integer"):
         self.mode = mode
@@ -249,6 +266,18 @@ class ExecutionPlan(abc.ABC):
         with self._timings_lock:
             out, self._stages = self._stages, {}
         return out
+
+    def drain_setup_timings(self) -> dict:
+        """One-time setup cost to fold into the engine's compile/warm ledger
+        (``{str_key: ms}``, drained once).  Remote plans report their
+        connect + handshake wall time here under ``"remote"``."""
+        return {}
+
+    # -------------------------------------------------------------- lifecycle
+    def close(self) -> None:
+        """Release executors the plan owns (thread pools, worker processes,
+        sockets).  Default: nothing to release.  Implementations must drain
+        in-flight ``predict_partials`` work before tearing down."""
 
 
 # ---------------------------------------------------------------------------

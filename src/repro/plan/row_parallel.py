@@ -34,9 +34,21 @@ class RowParallelPlan(ExecutionPlan):
         self.shards = int(shards or _DEFAULT_SHARDS)
         if self.shards < 1:
             raise ValueError(f"shards must be >= 1, got {shards}")
-        self._pool = ThreadPoolExecutor(
-            max_workers=self.shards, thread_name_prefix="row-shard"
-        )
+        self._pool = None  # created lazily, released by close()
+
+    def _ensure_pool(self) -> ThreadPoolExecutor:
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=self.shards, thread_name_prefix="row-shard"
+            )
+        return self._pool
+
+    def close(self) -> None:
+        """Drain in-flight chunk dispatches and release the pool (lazily
+        re-created on the next predict, like tree_parallel)."""
+        pool, self._pool = self._pool, None
+        if pool is not None:
+            pool.shutdown(wait=True)
 
     # ------------------------------------------------------------ execution
     def _chunks(self, X):
@@ -48,9 +60,10 @@ class RowParallelPlan(ExecutionPlan):
         chunks = self._chunks(X)
         # capture the parent span here, on the dispatching thread
         parent = self.trace_parent
+        pool = self._ensure_pool()
         futs = [
-            self._pool.submit(self._timed, f"r{i}/{len(chunks)}", method, c,
-                              span_parent=parent)
+            pool.submit(self._timed, f"r{i}/{len(chunks)}", method, c,
+                        span_parent=parent)
             for i, c in enumerate(chunks)
         ]
         return [f.result() for f in futs]

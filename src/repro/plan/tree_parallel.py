@@ -64,6 +64,7 @@ def tree_ranges(n_trees: int, shards: int) -> list:
 @register_plan
 class TreeParallelPlan(ExecutionPlan):
     name = "tree_parallel"
+    deterministic_only = True
 
     def __init__(self, model, *, mode: str = "integer", backend="reference",
                  shards=None, layout: Optional[str] = None,
@@ -112,10 +113,7 @@ class TreeParallelPlan(ExecutionPlan):
                 build_backend(name, ir.subset(a, b), mode, layout, backend_kwargs)
                 for name, (a, b) in zip(names, self.ranges)
             )
-            self._pool = ThreadPoolExecutor(
-                max_workers=len(self._shard_backends),
-                thread_name_prefix="tree-shard",
-            )
+        self._pool = None  # threaded path: created lazily, released by close()
 
     # ----------------------------------------------------------- strategies
     def _can_fuse(self, names, layout, backend_kwargs, device_parallel) -> bool:
@@ -209,9 +207,10 @@ class TreeParallelPlan(ExecutionPlan):
             f"s{i}:{b.name}[{a}:{e}]"
             for i, (b, (a, e)) in enumerate(zip(self._shard_backends, self.ranges))
         ]
+        pool = self._ensure_pool()
         futs = [
-            self._pool.submit(self._timed, lab, b.predict_partials, X,
-                              span_parent=parent)
+            pool.submit(self._timed, lab, b.predict_partials, X,
+                        span_parent=parent)
             for lab, b in zip(labels, self._shard_backends)
         ]
         partials = [np.asarray(f.result()) for f in futs]
@@ -223,6 +222,22 @@ class TreeParallelPlan(ExecutionPlan):
         self._record_stage("merge", (t1 - t0) / 1e9)
         self._span("merge", t0, t1, parent, shards=len(partials))
         return merged
+
+    def _ensure_pool(self) -> ThreadPoolExecutor:
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=len(self._shard_backends),
+                thread_name_prefix="tree-shard",
+            )
+        return self._pool
+
+    def close(self) -> None:
+        """Drain in-flight shard dispatches and release the pool.  The plan
+        stays usable — the next ``predict_partials`` lazily re-creates the
+        pool — because registry-memoized engines outlive one gateway."""
+        pool, self._pool = self._pool, None
+        if pool is not None:
+            pool.shutdown(wait=True)
 
     # -------------------------------------------------------------- metadata
     @property

@@ -83,23 +83,33 @@ class TreeEngine:
     """Shape-bucketing wrapper over one :class:`~repro.plan.ExecutionPlan`.
 
     ``packed`` is a :class:`~repro.ir.ForestIR` or any materialized layout
-    artifact; ``backend`` is a registered backend name (``"reference"``,
-    ``"pallas"``, ``"native_c"``, ``"native_c_table"``), a sequence of names
-    (heterogeneous tree-parallel: one per shard, cycled), or an
-    already-constructed backend instance (then ``packed``/``mode`` are taken
-    from it).  ``plan`` selects the execution plan (``"single"`` |
-    ``"tree_parallel"`` | ``"row_parallel"``; ``None``/``"auto"`` picks by
-    capability: one shard -> single, many shards -> tree-parallel for the
-    deterministic modes, row-parallel otherwise) and ``shards`` the shard
-    count.  ``layout`` pins a ForestIR layout; by default each shard
-    backend's declared ``preferred_layout`` is materialized (resolution goes
-    through the artifact's IR back-reference, so a ``pack_forest`` output can
-    feed a ragged-only backend without re-quantizing).  ``predict``/
-    ``predict_scores`` accept any row count; for shape-compiling plans the
-    batch is padded to a :func:`bucket_rows` bucket so each bucket compiles
-    once (tracked in ``compiled_buckets``).  ``max_bucket`` defaults to the
-    plan's ``preferred_block_rows`` hint so padded shapes line up with the
-    backends' internal tiling.
+    artifact.  The route — mode, backend(s), layout, plan, shards, backend
+    kwargs, autotune — is one :class:`~repro.serve.spec.EngineSpec`, passed
+    as ``spec`` (an EngineSpec, a dict, or a spec string like
+    ``"integer:bitvector@leaf_major+tree_parallel:4"``); the individual
+    keyword arguments survive as a deprecation shim that warns once per
+    call site.  Within the spec: ``backend`` is a registered backend name
+    (``"reference"``, ``"pallas"``, ``"native_c"``, ``"native_c_table"``,
+    ...), a sequence of names (heterogeneous tree-parallel: one per shard,
+    cycled), or an already-constructed backend instance (then
+    ``packed``/``mode`` are taken from it).  ``plan`` selects the execution
+    plan (``"single"`` | ``"tree_parallel"`` | ``"row_parallel"`` |
+    ``"remote_tree_parallel"``; ``None``/``"auto"`` picks by capability:
+    one shard -> single, many shards -> tree-parallel for the deterministic
+    modes, row-parallel otherwise) and ``shards`` the shard count.
+    ``layout`` pins a ForestIR layout; by default each shard backend's
+    declared ``preferred_layout`` is materialized (resolution goes through
+    the artifact's IR back-reference, so a ``pack_forest`` output can feed
+    a ragged-only backend without re-quantizing).  ``plan_kwargs`` carries
+    plan-specific knobs outside the spec (e.g. the remote plan's
+    ``workers``/``deadline_ms`` — deployment facts, not route identity).
+    ``predict``/``predict_scores`` accept any row count; for shape-compiling
+    plans the batch is padded to a :func:`bucket_rows` bucket so each
+    bucket compiles once (tracked in ``compiled_buckets``).  ``max_bucket``
+    defaults to the plan's ``preferred_block_rows`` hint so padded shapes
+    line up with the backends' internal tiling.  Engines whose plan owns
+    executors (thread pools, remote workers) release them via
+    :meth:`close`.
 
     ``autotune=True`` measures the serving backend's construction knobs
     (table-walk ``block_rows``, bitvector ``interleave``, Pallas block tiling
@@ -112,16 +122,25 @@ class TreeEngine:
     ``REPRO_AUTOTUNE=0`` env var disables tuning globally.
     """
 
-    def __init__(self, packed=None, *, mode: str = "integer",
-                 backend="reference", backend_kwargs: Optional[dict] = None,
+    def __init__(self, packed=None, spec=None, *, mode: Optional[str] = None,
+                 backend=None, backend_kwargs: Optional[dict] = None,
                  max_bucket: Optional[int] = None, layout: Optional[str] = None,
                  plan: Optional[str] = None, shards: Optional[int] = None,
-                 plan_kwargs: Optional[dict] = None, autotune: bool = False,
+                 plan_kwargs: Optional[dict] = None, autotune=None,
                  tuned_store: Optional[dict] = None):
         from repro.plan import create_plan, select_plan
         from repro.serve.autotune import TUNABLE_BACKENDS, autotune_enabled, \
             config_str
+        from repro.serve.spec import EngineSpec
 
+        spec = EngineSpec.coerce(spec, caller="TreeEngine", mode=mode,
+                                 backend=backend, layout=layout, plan=plan,
+                                 shards=shards, backend_kwargs=backend_kwargs,
+                                 autotune=autotune)
+        self.spec = spec
+        mode, backend, layout = spec.mode, spec.backend, spec.layout
+        plan, shards, autotune = spec.plan, spec.shards, spec.autotune
+        backend_kwargs = dict(spec.backend_kwargs) if spec.backend_kwargs else None
         self._ctor = dict(packed=packed, mode=mode, backend=backend,
                           backend_kwargs=backend_kwargs, layout=layout,
                           plan=plan, shards=shards, plan_kwargs=plan_kwargs)
@@ -251,9 +270,18 @@ class TreeEngine:
 
     def drain_compile_timings(self) -> dict:
         """First-execution (compile/warm) wall ms per bucket since the last
-        drain: ``{bucket_rows: ms}``."""
+        drain: ``{bucket_rows: ms}``, plus the autotuner's ``"tune"`` entry
+        and the plan's one-time setup cost (the remote plan's
+        connect + handshake ms under ``"remote"``)."""
         out, self._compile_ms = self._compile_ms, {}
+        out.update(self.plan.drain_setup_timings())
         return out
+
+    def close(self) -> None:
+        """Release executors the plan owns: shard thread pools drain and
+        re-create lazily; remote worker connections/processes tear down for
+        good."""
+        self.plan.close()
 
     # ------------------------------------------------------------- tracing
     def attach_trace(self, tracer, parent) -> None:

@@ -49,62 +49,84 @@ from repro.serve.registry import ModelRegistry
 
 
 class Gateway:
-    def __init__(self, registry: ModelRegistry, *, mode: str = "integer",
-                 backend="reference", layout: str = None,
+    def __init__(self, registry: ModelRegistry, spec=None, *, mode: str = None,
+                 backend=None, layout: str = None,
                  backend_kwargs: dict = None,
                  plan: str = None, shards: int = None,
-                 autotune: bool = False,
+                 autotune: bool = None, plan_kwargs: dict = None,
                  max_batch_rows: int = 256,
                  max_delay_ms: float = 2.0, max_queue_rows: int = 4096,
                  cache_rows: int = 65536, tracer=None):
+        from repro.serve.spec import EngineSpec
+
         self.registry = registry
         # NULL_TRACER hands out falsy NULL_SPANs, so every span hook below
         # short-circuits to a no-op when tracing is off
         self.tracer = tracer if tracer is not None else NULL_TRACER
-        self.mode = mode
-        self.backend = backend
-        self.layout = layout  # None -> the backend's preferred ForestIR layout
+        # the serving route is one EngineSpec (object, dict, or spec string
+        # like "integer:bitvector@leaf_major+tree_parallel:4"); the loose
+        # keyword arguments remain as the deprecation-shimmed pre-spec API
+        spec = EngineSpec.coerce(spec, caller="Gateway", mode=mode,
+                                 backend=backend, layout=layout, plan=plan,
+                                 shards=shards, backend_kwargs=backend_kwargs,
+                                 autotune=autotune)
+        self.spec = spec
+        self.mode = spec.mode
+        self.backend = spec.backend
+        self.layout = spec.layout  # None -> backend's preferred ForestIR layout
         # construction-time backend knobs (e.g. native_c_table's block_rows,
         # pallas' impl) — forwarded to every engine this gateway builds
-        self.backend_kwargs = backend_kwargs
+        self.backend_kwargs = \
+            dict(spec.backend_kwargs) if spec.backend_kwargs else None
         # execution plan spec: None/"auto"/"single"/"tree_parallel"/
-        # "row_parallel" (+ shard count), resolved per engine build.  Resolve
-        # once here so an impossible route (tree-parallel needs exact integer
-        # partials, which float mode lacks) fails at construction like any
-        # other bad route, not on the first request's lazy engine build.
+        # "row_parallel"/"remote_tree_parallel" (+ shard count), resolved per
+        # engine build.  Resolve once here so an impossible route (partial-
+        # merging plans need exact integer partials, which float mode lacks)
+        # fails at construction like any other bad route, not on the first
+        # request's lazy engine build.
         from repro.core.ensemble import mode_spec
-        from repro.plan import select_plan
+        from repro.plan import plan_class, select_plan
 
-        self.plan = plan
-        self.shards = shards
+        self.plan = spec.plan
+        self.shards = spec.shards
+        # deployment knobs for the plan (e.g. the remote plan's ``workers`` /
+        # ``deadline_ms``) — forwarded to every engine this gateway builds
+        self.plan_kwargs = plan_kwargs
         # arm warm-time measured autotuning on every engine this gateway
         # builds (single-shard tunable routes; see repro.serve.autotune)
-        self.autotune = autotune
-        resolved_plan = select_plan(plan, mode=mode, backend=backend,
-                                    shards=shards)  # raises on unknown names
-        if resolved_plan == "tree_parallel" and not mode_spec(mode).deterministic:
+        self.autotune = bool(spec.autotune)
+        resolved_plan = select_plan(spec.plan, mode=spec.mode,
+                                    backend=spec.backend,
+                                    shards=spec.shards)  # raises on unknowns
+        if plan_class(resolved_plan).deterministic_only \
+                and not mode_spec(spec.mode).deterministic:
             raise ValueError(
-                f"plan 'tree_parallel' needs exact integer partials; mode "
-                f"{mode!r} accumulates floats — use 'row_parallel' to shard"
+                f"plan {resolved_plan!r} needs exact integer partials; mode "
+                f"{spec.mode!r} accumulates floats — use 'row_parallel' to "
+                f"shard"
             )
         self.metrics = MetricsRegistry()
+        # every engine this gateway built, so close() can drain and release
+        # the executors (thread pools, remote worker processes) they own
+        self._engines: dict = {}
         # validate the route up front and let the backends' declared
         # capabilities decide cacheability: the cache is only sound when
         # every shard backend promises bit-deterministic outputs for this
         # mode.  ``backend`` may be a sequence of names (heterogeneous
         # tree-parallel shards) — all of them must agree.
-        names = [backend] if isinstance(backend, str) else list(backend)
+        names = [self.backend] if isinstance(self.backend, str) \
+            else list(self.backend)
         deterministic = True
         for name in names:
             caps = backend_class(name).capabilities
-            if mode not in caps.modes:
+            if self.mode not in caps.modes:
                 raise ValueError(
-                    f"backend {name!r} does not implement mode {mode!r}; "
+                    f"backend {name!r} does not implement mode {self.mode!r}; "
                     f"supported modes: {caps.modes}"
                 )
-            if layout is not None:
-                caps.require_layout(layout, name)
-            deterministic &= mode in caps.deterministic_modes
+            if self.layout is not None:
+                caps.require_layout(self.layout, name)
+            deterministic &= self.mode in caps.deterministic_modes
         # cache keys stay (model, version, mode, row-key): deterministic-mode
         # scores are bit-identical across layouts, backends, AND execution
         # plans (the plan-conformance invariant), so entries are shared no
@@ -128,10 +150,11 @@ class Gateway:
 
     # ----------------------------------------------------------- execution
     def _engine(self, mv):
-        return mv.engine(self.mode, backend=self.backend, layout=self.layout,
-                         backend_kwargs=self.backend_kwargs,
-                         plan=self.plan, shards=self.shards,
-                         autotune=self.autotune)
+        eng = mv.engine(self.spec, plan_kwargs=self.plan_kwargs)
+        # memoized per route inside the ModelVersion, so this dict stays
+        # small: one entry per (version, route) this gateway ever dispatched
+        self._engines[id(eng)] = eng
+        return eng
 
     def _execute(self, model_id: str, X: np.ndarray, rider_spans=()):
         """Batch executor handed to the MicroBatcher (runs in a thread).
@@ -167,6 +190,7 @@ class Gateway:
         # config the engine is serving on, if any
         mm.record_isa(eng.simd_isa())
         mm.record_tuned(eng.tuned_config)
+        mm.record_spec(str(self.spec))
         # meta = the version that actually computed, so cache fills are keyed
         # consistently even when a hot-swap lands between submit and dispatch
         return scores, preds, eng.padded_rows(len(X)), mv.version
@@ -270,7 +294,20 @@ class Gateway:
 
     # ------------------------------------------------------------- control
     async def close(self) -> None:
+        """Drain, then tear down.
+
+        The batcher close first *drains*: every batch already dispatched to
+        an engine (shard fan-outs in flight on plan thread pools or remote
+        workers) runs to completion and resolves its futures; only rows
+        still queued un-dispatched are failed.  Engines close after — their
+        ``close()`` joins plan executors and, for the remote plan, sends
+        CLOSE to every worker connection and reaps spawned worker
+        processes — so no in-flight shard dispatch is ever abandoned.
+        """
         await self.batcher.close()
+        for eng in self._engines.values():
+            eng.close()
+        self._engines.clear()
 
     def stats(self) -> dict:
         return {

@@ -59,6 +59,9 @@ class ModelMetrics:
     # the warm-time autotuner's chosen backend config (e.g. "interleave=4");
     # "-" when the route is untuned or tuning hasn't run yet
     tuned: str = "-"
+    # the canonical EngineSpec string the gateway serves this model on
+    # (e.g. "integer:reference@padded+tree_parallel:2"); "-" pre-dispatch
+    spec: str = "-"
     t_first: float = 0.0
     t_last: float = 0.0
 
@@ -131,6 +134,11 @@ class ModelMetrics:
         if config:
             self.tuned = str(config)
 
+    def record_spec(self, spec) -> None:
+        """Record the canonical serving-route spec string (None keeps "-")."""
+        if spec:
+            self.spec = str(spec)
+
     def _stage_mean(self, stage: str) -> float:
         h = self.stages.get(stage)
         return h.mean if h is not None and h.count else float("nan")
@@ -163,6 +171,7 @@ class ModelMetrics:
             "cache_hits": self.cache_hits,
             "isa": self.isa,
             "tuned": self.tuned,
+            "spec": self.spec,
             # the per-stage attribution columns: mean wall ms per stage
             # sample — where a request's latency actually went
             **{f"{stage}_ms": self._stage_mean(stage) for stage in _STAGE_COLUMNS},
@@ -197,6 +206,9 @@ _TABLE_COLS = (
     ("final_ms", "finalize_ms"), ("occup", "batch_occupancy"),
     ("pad_eff", "pad_efficiency"), ("hit_rate", "cache_hit_rate"),
     ("isa", "isa"), ("tuned", "tuned"), ("shards", "shards"),
+    # last column on purpose: the canonical spec string is long and would
+    # misalign everything to its right
+    ("spec", "spec"),
 )
 
 

@@ -37,6 +37,11 @@ class AdmissionError(RuntimeError):
     """Raised when a model's queue is over its admission bound."""
 
 
+# queued behind every pending request at close(): the lane worker drains all
+# real work ahead of it, then exits cleanly instead of being cancelled
+_CLOSE = object()
+
+
 @dataclass
 class _Pending:
     X: np.ndarray
@@ -67,6 +72,7 @@ class MicroBatcher:
                  max_delay_ms: float = 2.0, max_queue_rows: int = 4096,
                  on_batch: Callable[[str, int, int], None] | None = None,
                  on_queue: Callable[[str, list], None] | None = None,
+                 close_timeout_s: float = 30.0,
                  tracer=None, pass_spans: bool = False):
         if max_batch_rows <= 0 or max_queue_rows <= 0:
             raise ValueError("batch and queue bounds must be positive")
@@ -74,6 +80,7 @@ class MicroBatcher:
         self.max_batch_rows = max_batch_rows
         self.max_delay_s = max_delay_ms / 1e3
         self.max_queue_rows = max_queue_rows
+        self.close_timeout_s = close_timeout_s
         self._on_batch = on_batch
         self._on_queue = on_queue
         self._tracer = tracer
@@ -121,9 +128,12 @@ class MicroBatcher:
         lane = self._queues[model_id]
         loop = asyncio.get_running_loop()
         carry = None  # request that would have overflowed the previous batch
+        closing = False  # close() sentinel seen: finish the drain, then exit
         while True:
             first = carry if carry is not None else await lane.get()
             carry = None
+            if first is _CLOSE:  # close() with nothing in flight
+                return
             batch = [first]
             rows = first.rows
             deadline = first.t_enqueue + self.max_delay_s
@@ -134,6 +144,8 @@ class MicroBatcher:
                 try:
                     nxt = lane.get_nowait()
                 except asyncio.QueueEmpty:
+                    if closing:
+                        break  # nothing can arrive after the sentinel
                     timeout = deadline - time.perf_counter()
                     if timeout <= 0:
                         break
@@ -141,6 +153,11 @@ class MicroBatcher:
                         nxt = await asyncio.wait_for(lane.get(), timeout)
                     except asyncio.TimeoutError:
                         break
+                if nxt is _CLOSE:
+                    # everything queued ahead of the sentinel still executes;
+                    # this batch (and any carry) is the drain
+                    closing = True
+                    break
                 if rows + nxt.rows > self.max_batch_rows:
                     # never exceed max_batch_rows (warmed buckets stop there);
                     # the overflow request opens the next batch instead
@@ -190,6 +207,8 @@ class MicroBatcher:
                 for p in batch:
                     if not p.future.done():
                         p.future.set_exception(e)
+                if closing and carry is None:
+                    return
                 continue
             if self._on_batch is not None:
                 try:
@@ -203,26 +222,47 @@ class MicroBatcher:
                         (scores[off:off + p.rows], preds[off:off + p.rows], meta)
                     )
                 off += p.rows
+            if closing and carry is None:
+                return
 
     def queued_rows(self, model_id: str) -> int:
         return self._queued_rows.get(model_id, 0)
 
     async def close(self) -> None:
-        self._closed = True
-        for t in self._workers.values():
-            t.cancel()
-        for t in self._workers.values():
-            try:
-                await t
-            except (asyncio.CancelledError, Exception):
-                pass
-        # fail any still-queued submissions so their callers don't hang
+        """Drain, then stop.
+
+        Every request enqueued before this call — including batches already
+        executing on the engine — runs to completion and resolves its
+        future; a ``_CLOSE`` sentinel queued *behind* the pending work tells
+        each lane worker to exit once it has drained past it.  Only if a
+        lane overruns ``close_timeout_s`` is it cancelled, and only then are
+        its remaining callers failed with "batcher closed".
+        """
+        self._closed = True  # no await above this line: nothing can sneak in
+        live = [t for t in self._workers.values() if not t.done()]
+        for model_id, t in self._workers.items():
+            if not t.done():
+                self._queues[model_id].put_nowait(_CLOSE)
+        if live:
+            _, stragglers = await asyncio.wait(
+                live, timeout=self.close_timeout_s
+            )
+            for t in stragglers:
+                t.cancel()
+            for t in stragglers:
+                try:
+                    await t
+                except (asyncio.CancelledError, Exception):
+                    pass
+        # fail anything still queued (only possible on a straggler cancel)
         for model_id, lane in self._queues.items():
             while True:
                 try:
                     p = lane.get_nowait()
                 except asyncio.QueueEmpty:
                     break
+                if p is _CLOSE:
+                    continue  # a lane whose worker was already done
                 if not p.future.done():
                     p.future.set_exception(RuntimeError("batcher closed"))
             self._queued_rows[model_id] = 0

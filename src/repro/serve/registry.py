@@ -26,6 +26,16 @@ from repro.serve.engine import TreeEngine
 from repro.trees.io import forest_from_json
 
 
+def _freeze(obj):
+    """Nested dict/list -> hashable tuples (the plan_kwargs memo-key leg)."""
+    if isinstance(obj, dict):
+        return tuple(sorted(((k, _freeze(v)) for k, v in obj.items()),
+                            key=lambda kv: kv[0]))
+    if isinstance(obj, (list, tuple)):
+        return tuple(_freeze(v) for v in obj)
+    return obj
+
+
 @dataclass
 class ModelVersion:
     model_id: str
@@ -42,50 +52,80 @@ class ModelVersion:
     _tuned: dict = field(default_factory=dict, repr=False)
     _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
 
-    def engine(self, mode: str = "integer", *, backend="reference",
+    def engine(self, spec=None, *, mode: str = None, backend=None,
                layout: str = None, backend_kwargs: dict = None,
                plan: str = None, shards: int = None,
-               autotune: bool = False) -> TreeEngine:
-        """The memoized TreeEngine for one (mode, backend, layout, plan,
-        shards) route.
+               autotune=None, plan_kwargs: dict = None) -> TreeEngine:
+        """The memoized TreeEngine for one route.
 
-        ``layout=None`` resolves to the backend's ``preferred_layout`` (and
-        memoizes under the resolved name, so a later explicit request for
-        that layout reuses the same engine); a sequence of backend names
-        (heterogeneous tree-parallel) memoizes under the tuple.  ``plan``/
-        ``shards`` select the execution plan (single-shard by default).
-        ``backend_kwargs`` only apply on the call that first builds the
-        engine; later lookups for the same route return it as-is.
-        ``autotune`` arms warm-time measured tuning (memoized separately, so
-        tuned and untuned routes never alias); winners land in this
-        version's ``_tuned`` cache and survive hot-swaps.
+        The route is an :class:`~repro.serve.spec.EngineSpec` (object, dict,
+        or spec string) — ``engine("integer:bitvector+tree_parallel:4")``;
+        a bare mode name (``engine("integer")``) and the loose keyword
+        arguments remain as the deprecation-shimmed pre-spec API.
+
+        Within the spec: ``layout=None`` resolves to the backend's
+        ``preferred_layout`` (and memoizes under the resolved name, so a
+        later explicit request for that layout reuses the same engine); a
+        sequence of backend names (heterogeneous tree-parallel) memoizes
+        under the tuple.  ``backend_kwargs`` only apply on the call that
+        first builds the engine; later lookups for the same route return it
+        as-is.  ``autotune`` arms warm-time measured tuning (memoized
+        separately, so tuned and untuned routes never alias); winners land
+        in this version's ``_tuned`` cache and survive hot-swaps.
+        ``plan_kwargs`` carries plan deployment knobs (e.g. the remote
+        plan's ``workers``) and participates in the memo key; the remote
+        plan additionally receives this version's identity so its handshake
+        carries the model id + version.
         """
         from repro.backends import backend_class
         from repro.plan import select_plan
+        from repro.serve.spec import MODES, EngineSpec
 
-        if isinstance(backend, str):
-            resolved = layout or backend_class(backend).capabilities.preferred_layout
-            backend_key = backend
+        if isinstance(spec, str) and spec in MODES and mode is None:
+            # a bare mode name is valid under both APIs: alone it is simply
+            # the spec string "integer" (no deprecation); combined with loose
+            # route kwargs it is the pre-spec positional call
+            # engine("integer", backend=...) and goes through the shim
+            loose = (backend, layout, plan, shards, backend_kwargs)
+            if any(v is not None for v in loose) or autotune is not None:
+                mode, spec = spec, None
+        spec = EngineSpec.coerce(spec, caller="ModelVersion.engine",
+                                 mode=mode, backend=backend, layout=layout,
+                                 plan=plan, shards=shards,
+                                 backend_kwargs=backend_kwargs,
+                                 autotune=autotune)
+        if isinstance(spec.backend, str):
+            resolved = spec.layout or \
+                backend_class(spec.backend).capabilities.preferred_layout
+            backend_key = spec.backend
         else:  # heterogeneous shard spec: memoize under the name tuple
-            resolved = layout
-            backend_key = tuple(backend)
+            resolved = spec.layout
+            backend_key = tuple(spec.backend) \
+                if isinstance(spec.backend, tuple) else spec.backend
         # memoize under the *resolved* plan so plan=None / "auto" / "single"
         # (and their equivalent shard counts) share one engine instead of
         # rebuilding — and recompiling — the same route per alias
-        resolved_plan = select_plan(plan, mode=mode, backend=backend,
-                                    shards=shards, model=self.packed)
-        key = (mode, backend_key, resolved, resolved_plan,
-               None if resolved_plan == "single" else shards, bool(autotune))
+        resolved_plan = select_plan(spec.plan, mode=spec.mode,
+                                    backend=spec.backend, shards=spec.shards,
+                                    model=self.packed)
+        key = (spec.mode, backend_key, resolved, resolved_plan,
+               None if resolved_plan == "single" else spec.shards,
+               bool(spec.autotune), _freeze(plan_kwargs))
         with self._lock:
             if key not in self._engines:
                 t0 = time.perf_counter()
+                pk = dict(plan_kwargs or {})
+                if resolved_plan == "remote_tree_parallel":
+                    # the wire handshake carries the model identity
+                    pk.setdefault("model_id", self.model_id)
+                    pk.setdefault("version", self.version)
                 self._engines[key] = TreeEngine(
-                    self.packed, mode=mode, backend=backend, layout=resolved,
-                    backend_kwargs=backend_kwargs, plan=plan, shards=shards,
-                    autotune=autotune, tuned_store=self._tuned,
+                    self.packed, spec.replace(layout=resolved),
+                    plan_kwargs=pk or None, tuned_store=self._tuned,
                 )
                 route = "/".join(
-                    str(p) for p in (mode, backend_key, resolved, resolved_plan)
+                    str(p) for p in (spec.mode, backend_key, resolved,
+                                     resolved_plan)
                 )
                 self._build_ms[route] = (time.perf_counter() - t0) * 1e3
             return self._engines[key]

@@ -1,3 +1,4 @@
+import os
 import shutil
 import sys
 import types
@@ -8,6 +9,15 @@ import pytest
 # NOTE: do NOT set --xla_force_host_platform_device_count here — smoke tests
 # and benches must see 1 device; only launch/dryrun.py uses 512 placeholders.
 # Tests that need a few devices spawn subprocesses (see test_distributed.py).
+
+# The whole suite is host-CPU-only (accelerator paths run in interpret mode
+# or on forced host devices).  On images that bundle libtpu, leaving the
+# platform unpinned makes every fresh jax process — this one, the
+# test_distributed subprocesses, the remote shard workers — probe the cloud
+# metadata service for a TPU, which stalls for minutes when that endpoint
+# blackholes instead of refusing.  Pin before anything imports jax; spawned
+# children inherit it.  setdefault so a caller pinning a real platform wins.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 # ---------------------------------------------------------------------------
 # hypothesis fallback shim: the property tests import `given`/`settings`/

@@ -27,7 +27,10 @@ def _run(py: str, devices: int = 8, timeout: int = 560) -> str:
         capture_output=True,
         text=True,
         timeout=timeout,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        # JAX_PLATFORMS pinned: these children force host-platform devices
+        # via XLA_FLAGS, so a bundled libtpu must never probe the cloud
+        # metadata service for a TPU (minutes of retry when it blackholes).
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "JAX_PLATFORMS": "cpu"},
         cwd="/root/repo",
     )
     assert out.returncode == 0, out.stderr[-3000:]

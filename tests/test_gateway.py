@@ -106,8 +106,10 @@ def test_micro_batcher_admission_control():
     asyncio.run(run())
 
 
-def test_micro_batcher_close_fails_pending_submits():
-    """close() must fail queued/in-flight submissions, never strand them."""
+def test_micro_batcher_close_drains_pending_submits():
+    """close() drains: everything submitted before it resolves to a real
+    result (never "batcher closed"), and nothing is stranded.  Submissions
+    arriving after close() fail fast."""
     def slow_execute(model_id, X):
         time.sleep(0.2)
         return X.sum(axis=1, keepdims=True), np.zeros(len(X), np.int32), len(X), None
@@ -121,11 +123,35 @@ def test_micro_batcher_close_fails_pending_submits():
         done = await asyncio.wait_for(
             asyncio.gather(*subs, return_exceptions=True), timeout=2.0
         )
+        with pytest.raises(RuntimeError):
+            await mb.submit("m", np.zeros((1, 2), np.float32))
         return done
 
     done = asyncio.run(run())
-    # every caller resolved: either a real result or "batcher closed"
-    assert all(isinstance(r, tuple) or isinstance(r, RuntimeError) for r in done)
+    # every caller that submitted before close() got its real result
+    assert all(isinstance(r, tuple) for r in done)
+
+
+def test_micro_batcher_close_timeout_fails_stragglers():
+    """A lane that overruns close_timeout_s is cancelled and its remaining
+    callers failed — drain must not hang forever on a wedged executor."""
+    def wedged_execute(model_id, X):
+        time.sleep(1.2)  # >> close_timeout_s; asyncio.run reaps the thread
+        return X.sum(axis=1, keepdims=True), np.zeros(len(X), np.int32), len(X), None
+
+    async def run():
+        mb = MicroBatcher(wedged_execute, max_batch_rows=1, max_delay_ms=0.1,
+                          close_timeout_s=0.2)
+        subs = [asyncio.ensure_future(mb.submit("m", np.zeros((1, 2), np.float32)))
+                for _ in range(3)]
+        await asyncio.sleep(0.05)
+        await mb.close()
+        return await asyncio.wait_for(
+            asyncio.gather(*subs, return_exceptions=True), timeout=10.0
+        )
+
+    done = asyncio.run(run())
+    assert all(isinstance(r, (tuple, RuntimeError)) for r in done)
     assert any(isinstance(r, RuntimeError) for r in done)
 
 
