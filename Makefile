@@ -4,7 +4,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: test test-fast conformance check bench bench-smoke ci obs \
-	obs-artifacts worker-fleet serve-trees serve-gateway
+	obs-artifacts worker-fleet artifact-check serve-trees serve-gateway
 
 # tier-1 verify (see ROADMAP.md)
 test:
@@ -53,9 +53,9 @@ bench:
 # artifact CI uploads
 bench-smoke:
 	REPRO_BENCH_TINY=1 REPRO_BENCH_DEVICES=8 \
-		REPRO_BENCH_SNAPSHOT=BENCH_9.json \
+		REPRO_BENCH_SNAPSHOT=BENCH_10.json \
 		$(PY) benchmarks/run.py backend_matrix backend_bitvector \
-		memory_footprint plan_scaling remote_scaleout
+		memory_footprint plan_scaling remote_scaleout coldstart_swap
 
 # the remote-worker fabric suite: spawns loopback worker processes, runs
 # the cross-process conformance + kill/re-dispatch tests, and (via
@@ -66,8 +66,19 @@ worker-fleet:
 	REPRO_WORKER_SPAN_DIR=benchmarks/artifacts \
 		$(PY) -m pytest -q tests/test_remote.py tests/test_spec.py
 
+# ITRF artifact gate: the pytest artifact suite (round-trip bit-identity,
+# mmap safety, registry retention, tune-db persistence), then the converter
+# selftest, which trains a forest, converts it, and reloads the .itrf in a
+# FRESH process via mmap asserting bit-identical reference partials.  Leaves
+# benchmarks/artifacts/model.itrf for the CI artifact upload.
+artifact-check:
+	mkdir -p benchmarks/artifacts
+	$(PY) -m pytest -q tests/test_artifact.py
+	$(PY) -m repro.trees.convert --selftest benchmarks/artifacts/model.itrf
+	$(PY) -m repro.trees.convert --inspect benchmarks/artifacts/model.itrf
+
 # exactly what .github/workflows/ci.yml runs, as one local target
-ci: test-fast conformance bench-smoke worker-fleet
+ci: test-fast conformance bench-smoke worker-fleet artifact-check
 
 serve-trees:
 	$(PY) -m repro.launch.serve --trees

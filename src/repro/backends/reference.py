@@ -25,17 +25,28 @@ class ReferenceBackend(TreeBackend):
         preferred_block_rows=None,  # any padded shape is fine
         compiles_per_shape=True,
         # the jnp walk gathers by node index over (T, N) tables, so any
-        # node-table layout works; node order cannot perturb scores
-        supported_layouts=("padded", "leaf_major"),
+        # node-table layout works; node order cannot perturb scores.
+        # packed_leaf is served by decoding its exact group-quantized leaf
+        # payload into dense tables at construction (deterministic modes
+        # only — the packed payload is fixed-point)
+        supported_layouts=("padded", "leaf_major", "packed_leaf"),
         preferred_layout="padded",
     )
 
     def __init__(self, packed: PackedEnsemble, mode: str = "integer"):
         super().__init__(packed, mode)
+        walk = packed
+        if getattr(packed, "layout", "padded") == "packed_leaf":
+            if not self.deterministic:
+                raise ValueError(
+                    "layout 'packed_leaf' stores fixed-point leaves only; "
+                    "serve it in a deterministic mode (flint/integer)"
+                )
+            walk = packed.decoded_tables()
         if self.deterministic:
-            self._partials_fn = make_partials_fn(packed, mode)
+            self._partials_fn = make_partials_fn(walk, mode)
         else:
-            self._fn = make_predict_fn(packed, mode)
+            self._fn = make_predict_fn(walk, mode)
 
     def predict_partials(self, X):
         if not self.deterministic:

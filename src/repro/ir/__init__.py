@@ -7,7 +7,12 @@ This package makes the layout a first-class axis instead:
     forest  --quantize once-->  ForestIR  --materialize-->  layout artifact
                                 (canonical,                  (padded | ragged |
                                  unpadded)                    leaf_major |
-                                                              bitvector)
+                                                              bitvector |
+                                                              packed_leaf)
+
+``ForestIR`` also round-trips through the ITRF binary artifact
+(``artifact.py``): ``ir.to_itrf(path)`` / ``ForestIR.from_itrf(path)``,
+with ``mmap=True`` loads returning zero-copy read-only views over the file.
 
 ``ForestIR`` (``forest_ir.py``) holds the canonical quantized forest — FlInt
 int32 threshold keys, uint32 fixed-point leaves, per-tree node counts, all
@@ -25,10 +30,12 @@ from repro.ir.layouts import (
     register_layout,
 )
 from repro.ir.bitvector import BitvectorEnsemble  # registers "bitvector"
+from repro.ir.packed_leaf import PackedLeafEnsemble  # registers "packed_leaf"
 
 __all__ = [
     "BitvectorEnsemble",
     "ForestIR",
+    "PackedLeafEnsemble",
     "RaggedEnsemble",
     "available_layouts",
     "materialize",

@@ -234,6 +234,39 @@ class ForestIR:
             quant_scale=self.scale,
         )
 
+    # ------------------------------------------------------------- artifacts
+    def to_itrf(self, path, **kwargs) -> dict:
+        """Serialize as an ITRF binary artifact (see :mod:`repro.ir.artifact`
+        for the format and the writer options)."""
+        from repro.ir.artifact import write_itrf
+
+        return write_itrf(path, self, **kwargs)
+
+    @classmethod
+    def from_itrf(cls, path, *, mmap: bool = True) -> "ForestIR":
+        """Load an ITRF artifact.  ``mmap=True`` returns zero-copy read-only
+        views over the file mapping; ``mmap=False`` returns private writable
+        copies.  Either way the arrays are the file's bits verbatim — no
+        re-quantization — so scores are bit-identical to the written IR."""
+        from repro.ir.artifact import read_itrf
+
+        return read_itrf(path, mmap_arrays=mmap)
+
+    def nbytes_integer(self) -> int:
+        """Bytes of the canonical integer-only CSR arrays (what an ITRF
+        written with ``include_float=False, pack_leaves=False`` stores,
+        minus header/alignment)."""
+        return (self.feature.nbytes + self.threshold_key.nbytes
+                + self.left.nbytes + self.right.nbytes
+                + self.leaf_fixed.nbytes + self.node_offsets.nbytes
+                + self.tree_depths.nbytes)
+
+    def nbytes_float(self) -> int:
+        return (self.feature.nbytes + self.threshold.nbytes
+                + self.left.nbytes + self.right.nbytes
+                + self.leaf_probs.nbytes + self.node_offsets.nbytes
+                + self.tree_depths.nbytes)
+
     # ------------------------------------------------------- materialization
     def materialize(self, layout: str = "padded"):
         """The concrete artifact for one registered layout, memoized per IR."""

@@ -213,12 +213,28 @@ class RemoteTreeParallelPlan(ExecutionPlan):
                 "n_trees": int(ir.n_trees), "n_classes": int(ir.n_classes),
                 "n_features": int(ir.n_features),
                 "quant_scale": int(ir.scale)}
-        hello = wire.encode_hello(meta, {
-            "feature": ir.feature, "threshold": ir.threshold,
-            "threshold_key": ir.threshold_key, "left": ir.left,
-            "right": ir.right, "leaf_fixed": ir.leaf_fixed,
-            "node_offsets": ir.node_offsets, "tree_depths": ir.tree_depths,
-        })
+        itrf_bytes = getattr(ir, "itrf_bytes", None)
+        wire_arrays = (ir.feature, ir.threshold, ir.threshold_key, ir.left,
+                       ir.right, ir.leaf_fixed, ir.node_offsets,
+                       ir.tree_depths)
+        if itrf_bytes is not None \
+                and itrf_bytes.nbytes <= sum(a.nbytes for a in wire_arrays):
+            # artifact fast path: the model came from an ITRF file, so HELLO
+            # ships the raw artifact image verbatim — no per-array encode or
+            # JSON directory on the send side, and the worker rebuilds the
+            # IR through the binary reader (zero-copy views over the
+            # payload).  Guarded by size so a float-bearing artifact (whose
+            # image carries the float64 leaf table the wire deliberately
+            # omits) falls back to the explicit array payload.
+            meta["artifact_format"] = "itrf"
+            hello = wire.encode_hello(meta, {"itrf": itrf_bytes})
+        else:
+            hello = wire.encode_hello(meta, {
+                "feature": ir.feature, "threshold": ir.threshold,
+                "threshold_key": ir.threshold_key, "left": ir.left,
+                "right": ir.right, "leaf_fixed": ir.leaf_fixed,
+                "node_offsets": ir.node_offsets, "tree_depths": ir.tree_depths,
+            })
 
         self._conns = []
         try:

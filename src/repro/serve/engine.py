@@ -169,9 +169,13 @@ class TreeEngine:
         self.max_bucket = max_bucket or self.plan.preferred_block_rows or 4096
         self.compiled_buckets: set[int] = set()
         # first-execution wall ms per bucket (jit compile / native build /
-        # warm cost) plus the autotune measuring cost under the "tune" key,
-        # drained by the gateway into per-model metrics
+        # warm cost) plus the autotune measuring cost under the "tune" key
+        # and the registry's artifact-load ms under "load", drained by the
+        # gateway into per-model metrics
         self._compile_ms: dict = {}
+        # set by close(); the registry's retention policy closes engines of
+        # released versions and the gateway prunes closed engines
+        self.closed = False
 
     def _tune_key(self):
         c = self._ctor
@@ -280,7 +284,9 @@ class TreeEngine:
     def close(self) -> None:
         """Release executors the plan owns: shard thread pools drain and
         re-create lazily; remote worker connections/processes tear down for
-        good."""
+        good.  Marks the engine closed so holders (the gateway's engine set)
+        can drop their references."""
+        self.closed = True
         self.plan.close()
 
     # ------------------------------------------------------------- tracing

@@ -152,7 +152,12 @@ class Gateway:
     def _engine(self, mv):
         eng = mv.engine(self.spec, plan_kwargs=self.plan_kwargs)
         # memoized per route inside the ModelVersion, so this dict stays
-        # small: one entry per (version, route) this gateway ever dispatched
+        # small: one entry per (version, route) this gateway ever dispatched.
+        # Engines the registry's retention policy closed (released versions)
+        # are pruned here, so swapped-out versions actually free.
+        if any(e.closed for e in self._engines.values()):
+            self._engines = {k: e for k, e in self._engines.items()
+                             if not e.closed}
         self._engines[id(eng)] = eng
         return eng
 

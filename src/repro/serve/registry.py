@@ -1,9 +1,17 @@
 """Multi-model registry: versioned packed ensembles behind stable model ids.
 
-Models enter through either boundary the repo supports:
-  * a trained forest object (``register_forest``), or
+Models enter through any boundary the repo supports:
+  * a trained forest object (``register_forest``),
   * the Treelite-style JSON artifact (``register_json``), i.e. the
-    ``trees/io`` exchange format — the path externally-trained models take.
+    ``trees/io`` exchange format — the path externally-trained models take, or
+  * the ITRF binary artifact (``register_artifact``) — the deployment
+    boundary: the file is mmap-ed read-only and the version serves zero-copy
+    views over the shared pages, so load cost is O(1) in forest size and no
+    JSON is parsed.  Re-registering the same (unchanged) artifact file —
+    the hot-swap-back case — reuses the already-parsed IR *object*, layouts
+    and all, so a swap costs microseconds.  The measured load wall-ms rides
+    the compile/warm ledger as the ``"load"`` bucket of the version's first
+    engine, next to the existing ``"tune"``/``"remote"`` entries.
 
 Each ``register_*`` call creates a new immutable :class:`ModelVersion` and
 atomically repoints the model id at it (hot-swap).  In-flight batches formed
@@ -14,9 +22,18 @@ reference jnp, Pallas kernel, either compiled-C flavor, over any ForestIR
 layout the backend walks — with one compile set per version.  The version's
 padded tables carry the canonical IR, so every layout materializes from one
 quantization.
+
+Retention: superseded versions used to stay resident forever (engines,
+compiled C libraries, tuned caches).  The registry now keeps the newest
+``retain`` versions per model id (default 2: current + previous, so
+in-flight batches on the just-swapped-out version still finish) and
+releases anything older — :meth:`ModelVersion.release` closes and drops
+every engine.  ``release(model_id, version)`` frees a retained non-current
+version explicitly.
 """
 from __future__ import annotations
 
+import os
 import threading
 import time
 from dataclasses import dataclass, field
@@ -40,9 +57,13 @@ def _freeze(obj):
 class ModelVersion:
     model_id: str
     version: int
-    packed: PackedEnsemble
-    source: str  # "forest" | "json"
+    packed: PackedEnsemble  # or a ForestIR (register_artifact)
+    source: str  # "forest" | "json" | "packed" | "artifact"
     _engines: dict = field(default_factory=dict, repr=False)
+    # register_artifact's measured load wall-ms, charged once to the first
+    # engine's compile ledger under the "load" bucket
+    _load_ms: float = field(default=None, repr=False)
+    released: bool = field(default=False, repr=False)
     # wall-ms spent constructing each route's engine (backend builds, native
     # compiles) — the cold-start cost ``describe()`` surfaces per model
     _build_ms: dict = field(default_factory=dict, repr=False)
@@ -112,6 +133,12 @@ class ModelVersion:
                None if resolved_plan == "single" else spec.shards,
                bool(spec.autotune), _freeze(plan_kwargs))
         with self._lock:
+            if self.released:
+                raise RuntimeError(
+                    f"model {self.model_id!r} v{self.version} was released; "
+                    f"route new requests through the registry's current "
+                    f"version"
+                )
             if key not in self._engines:
                 t0 = time.perf_counter()
                 pk = dict(plan_kwargs or {})
@@ -119,10 +146,16 @@ class ModelVersion:
                     # the wire handshake carries the model identity
                     pk.setdefault("model_id", self.model_id)
                     pk.setdefault("version", self.version)
-                self._engines[key] = TreeEngine(
+                eng = TreeEngine(
                     self.packed, spec.replace(layout=resolved),
                     plan_kwargs=pk or None, tuned_store=self._tuned,
                 )
+                if self._load_ms is not None:
+                    # the artifact load cost surfaces once, through the same
+                    # ledger compile/tune/remote costs already ride
+                    eng._compile_ms["load"] = self._load_ms
+                    self._load_ms = None
+                self._engines[key] = eng
                 route = "/".join(
                     str(p) for p in (spec.mode, backend_key, resolved,
                                      resolved_plan)
@@ -130,15 +163,35 @@ class ModelVersion:
                 self._build_ms[route] = (time.perf_counter() - t0) * 1e3
             return self._engines[key]
 
+    def release(self) -> None:
+        """Close and drop every engine this version built (thread pools,
+        remote workers, native libraries become collectable).  Idempotent;
+        an engine handle obtained before the release stops serving."""
+        with self._lock:
+            engines = list(self._engines.values())
+            self._engines.clear()
+            self.released = True
+        for eng in engines:
+            eng.close()
+
 
 class ModelRegistry:
-    def __init__(self):
+    def __init__(self, *, retain: int = 2):
+        if retain < 1:
+            raise ValueError("retain must keep at least the current version")
+        self.retain = retain
         self._models: dict[str, ModelVersion] = {}
         self._history: dict[str, int] = {}  # model_id -> latest version number
+        # model_id -> {version: ModelVersion} for the retained window
+        self._versions: dict[str, dict[int, ModelVersion]] = {}
+        # (realpath, mtime_ns, size) -> ForestIR: hot-swapping back to an
+        # already-mapped, unchanged artifact file reuses the parsed IR and
+        # its materialized layouts — the pages were never duplicated
+        self._artifact_cache: dict = {}
         self._lock = threading.Lock()
 
     # ---------------------------------------------------------- registration
-    def _install(self, model_id: str, packed: PackedEnsemble, source: str) -> ModelVersion:
+    def _install(self, model_id: str, packed, source: str) -> ModelVersion:
         with self._lock:
             version = self._history.get(model_id, 0) + 1
             mv = ModelVersion(model_id=model_id, version=version, packed=packed,
@@ -151,7 +204,13 @@ class ModelRegistry:
                 mv._tuned.update(prev._tuned)
             self._history[model_id] = version
             self._models[model_id] = mv  # atomic repoint = hot-swap
-            return mv
+            window = self._versions.setdefault(model_id, {})
+            window[version] = mv
+            evict = sorted(window)[:-self.retain]
+            evicted = [window.pop(v) for v in evict]
+        for old in evicted:  # outside the lock: close() may drain executors
+            old.release()
+        return mv
 
     def register_packed(self, model_id: str, packed: PackedEnsemble) -> ModelVersion:
         return self._install(model_id, packed, "packed")
@@ -162,6 +221,75 @@ class ModelRegistry:
     def register_json(self, model_id: str, payload: str) -> ModelVersion:
         """Load from the trees/io JSON artifact boundary."""
         return self._install(model_id, pack_forest(forest_from_json(payload)), "json")
+
+    def register_artifact(self, model_id: str, path, *,
+                          mmap: bool = True) -> ModelVersion:
+        """Load an ITRF binary artifact — no JSON parse, no re-quantization.
+
+        With ``mmap=True`` the version's ForestIR is zero-copy read-only
+        views over the file mapping; every process registering the same file
+        shares one page cache.  The measured load wall-ms lands in the first
+        engine's compile ledger under ``"load"``.  If the artifact carries a
+        ``tune_db`` entry for this host's ISA (see
+        :func:`repro.ir.artifact.host_isa_key`), the autotune winners seed
+        the version's ``_tuned`` cache, so warm-time tuning is skipped;
+        entries recorded on hosts with different CPU flags are ignored.
+        """
+        from repro.ir.artifact import deserialize_tuned, host_isa_key, \
+            read_itrf
+
+        t0 = time.perf_counter()
+        cache_key = None
+        ir = None
+        if mmap:
+            try:
+                st = os.stat(path)
+                cache_key = (os.path.realpath(path), st.st_mtime_ns,
+                             st.st_size)
+            except OSError:
+                cache_key = None
+            with self._lock:
+                ir = self._artifact_cache.get(cache_key)
+        if ir is None:
+            ir = read_itrf(path, mmap_arrays=mmap)
+            if cache_key is not None:
+                with self._lock:
+                    self._artifact_cache[cache_key] = ir
+        load_ms = (time.perf_counter() - t0) * 1e3
+        mv = self._install(model_id, ir, "artifact")
+        mv._load_ms = load_ms
+        for route, kwargs in deserialize_tuned(
+                getattr(ir, "itrf_tuned", {}).get(host_isa_key(), {})).items():
+            # live measurements carried across the swap still win
+            mv._tuned.setdefault(route, kwargs)
+        return mv
+
+    def export_tuned(self, model_id: str, path) -> None:
+        """Persist the current version's measured autotune winners into an
+        existing ITRF file's ``tune_db`` section (keyed by this host's ISA),
+        so the next process to ``register_artifact`` it starts warm-tuned."""
+        from repro.ir.artifact import update_tuned
+
+        mv = self.get(model_id)
+        with mv._lock:
+            tuned = dict(mv._tuned)
+        if tuned:
+            update_tuned(path, tuned)
+
+    def release(self, model_id: str, version: int) -> None:
+        """Free a retained, non-current version explicitly (its engines
+        close; compiled artifacts become collectable)."""
+        with self._lock:
+            if self._models.get(model_id) is not None \
+                    and self._models[model_id].version == version:
+                raise ValueError(
+                    f"version {version} is the current version of "
+                    f"{model_id!r}; register a replacement before releasing"
+                )
+            mv = self._versions.get(model_id, {}).pop(version, None)
+        if mv is None:
+            raise KeyError(f"no retained version {version} for {model_id!r}")
+        mv.release()
 
     # ---------------------------------------------------------------- lookup
     def get(self, model_id: str) -> ModelVersion:
@@ -189,7 +317,10 @@ class ModelRegistry:
             }
             # bytes per layout, for the layouts serving routes have actually
             # materialized (reporting must not force builds of the others)
-            ir = getattr(mv.packed, "ir", None)
+            from repro.ir import ForestIR
+
+            ir = mv.packed if isinstance(mv.packed, ForestIR) \
+                else getattr(mv.packed, "ir", None)
             if ir is not None:
                 d["layout_kb"] = {
                     name: ir.materialize(name).nbytes_integer() / 1e3

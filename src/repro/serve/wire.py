@@ -12,7 +12,12 @@ framework:
                table, and every array a worker needs to rebuild the forest
                (leaf_probs ships as zeros: remote plans are
                deterministic-mode only, and the float leaf table is the one
-               big array the uint32 path never reads)
+               big array the uint32 path never reads).  When the gateway's
+               model came from an ITRF artifact, ``meta["artifact_format"]
+               == "itrf"`` and the single array ``"itrf"`` is the raw
+               artifact image — the worker rebuilds the forest through
+               ``repro.ir.artifact.read_itrf_bytes`` with no per-array
+               directory round-trip (the artifact-bytes fast path)
     HELLO_ACK := JSON {pid, host, wire, model, version}
     PREDICT := u32 req_id, u32 shard_id, u32 rows, u32 features, then
                rows*features little-endian float32

@@ -50,25 +50,33 @@ class _Session:
         meta, arrays = wire.decode_hello(payload)
         from repro.ir import ForestIR
 
-        total = int(arrays["feature"].shape[0])
-        n_classes = int(meta["n_classes"])
-        self.ir = ForestIR(
-            feature=arrays["feature"].astype(np.int32),
-            threshold=arrays["threshold"].astype(np.float32),
-            threshold_key=arrays["threshold_key"].astype(np.int32),
-            left=arrays["left"].astype(np.int32),
-            right=arrays["right"].astype(np.int32),
-            # deterministic modes never read float leaf probabilities — the
-            # one big float64 table stays off the wire (documented in wire.py)
-            leaf_probs=np.zeros((total, n_classes), np.float64),
-            leaf_fixed=arrays["leaf_fixed"].astype(np.uint32),
-            node_offsets=arrays["node_offsets"].astype(np.int64),
-            tree_depths=arrays["tree_depths"].astype(np.int32),
-            n_trees=int(meta["n_trees"]),
-            n_classes=n_classes,
-            n_features=int(meta["n_features"]),
-            quant_scale=int(meta["quant_scale"]),
-        )
+        if meta.get("artifact_format") == "itrf":
+            # artifact fast path: the payload carries a raw ITRF image —
+            # rebuild the forest through the binary reader (views over the
+            # received bytes) instead of the per-array directory
+            from repro.ir.artifact import read_itrf_bytes
+
+            self.ir = read_itrf_bytes(arrays["itrf"].tobytes())
+        else:
+            total = int(arrays["feature"].shape[0])
+            n_classes = int(meta["n_classes"])
+            self.ir = ForestIR(
+                feature=arrays["feature"].astype(np.int32),
+                threshold=arrays["threshold"].astype(np.float32),
+                threshold_key=arrays["threshold_key"].astype(np.int32),
+                left=arrays["left"].astype(np.int32),
+                right=arrays["right"].astype(np.int32),
+                # deterministic modes never read float leaf probabilities —
+                # the one big float64 table stays off the wire (see wire.py)
+                leaf_probs=np.zeros((total, n_classes), np.float64),
+                leaf_fixed=arrays["leaf_fixed"].astype(np.uint32),
+                node_offsets=arrays["node_offsets"].astype(np.int64),
+                tree_depths=arrays["tree_depths"].astype(np.int32),
+                n_trees=int(meta["n_trees"]),
+                n_classes=n_classes,
+                n_features=int(meta["n_features"]),
+                quant_scale=int(meta["quant_scale"]),
+            )
         self.meta = meta
         self.mode = str(meta["mode"])
         self.shard_table = {int(s["shard"]): s for s in meta["shards"]}

@@ -93,7 +93,11 @@ def test_capability_flags():
     # layout axis: node-table backends walk both (T, N) orderings; the
     # table-walk C backend is the ragged layout's consumer.  Pallas prefers
     # leaf_major (the linear-scan kernel's layout); the others stay padded.
-    for caps in (ref, pal, nat):
+    # reference additionally serves the packed_leaf artifact layout by
+    # decoding the group-quantized leaf table through the exact codec.
+    assert set(ref.supported_layouts) == {"padded", "leaf_major",
+                                          "packed_leaf"}
+    for caps in (pal, nat):
         assert set(caps.supported_layouts) == {"padded", "leaf_major"}
     assert ref.preferred_layout == "padded"
     assert nat.preferred_layout == "padded"
@@ -423,6 +427,36 @@ def test_bitvector_interleave_widths_degenerate(degenerate_case, interleave):
                                   err_msg=f"bitvector/k{interleave}")
     np.testing.assert_array_equal(np.asarray(p), p_ref,
                                   err_msg=f"bitvector/k{interleave}")
+
+
+@pytest.fixture(scope="module")
+def itrf_case(random_case, tmp_path_factory):
+    """The same randomized forest, round-tripped through an ITRF artifact
+    and reloaded as zero-copy mmap views — the registry's load path."""
+    packed, rows = random_case
+    ir = packed.to_ir()
+    path = tmp_path_factory.mktemp("itrf") / "conformance.itrf"
+    ir.to_itrf(str(path), pack_leaves=True)
+    return ir, ForestIR.from_itrf(str(path), mmap=True), rows
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_mmap_artifact_bit_identity(itrf_case, backend):
+    """The conformance matrix over an mmap-loaded artifact: every (layout,
+    mode) pair of every backend, built from read-only views over the file's
+    pages, must match the direct in-memory IR bit for bit."""
+    ir, ir_mmap, rows = itrf_case
+    assert not ir_mmap.feature.flags.writeable  # really the mapped pages
+    for layout, mode in _layout_mode_pairs(backend):
+        s_ref, p_ref = _scores(
+            create_backend("reference", ir.materialize("padded"), mode=mode),
+            rows)
+        eng = TreeEngine(ir_mmap, mode=mode, backend=backend, layout=layout)
+        s, p = eng.predict_scores(rows)
+        np.testing.assert_array_equal(np.asarray(s), s_ref,
+                                      err_msg=f"itrf/{backend}/{layout}/{mode}")
+        np.testing.assert_array_equal(np.asarray(p), p_ref,
+                                      err_msg=f"itrf/{backend}/{layout}/{mode}")
 
 
 def test_degenerate_ragged_has_no_padding_waste(degenerate_case):
